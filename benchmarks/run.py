@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit, row
+
+
+MODULES = [
+    "fig3_latency_cdf",
+    "fig5_local_vs_distributed",
+    "fig7_scalability",
+    "tab1_access_counts",
+    "tab2_memory_hierarchy",
+    "fig10_sgd",
+    "fig11_concurrency",
+    "fig12_olap",
+    "fig13_oltp",
+    "roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    only = sys.argv[1:] or None
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:   # noqa: BLE001
+            traceback.print_exc()
+            emit([row(f"{mod_name}/FAILED", 0.0, repr(e)[:80])])
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Tab. 1 analogue: local vs remote chiplet traffic, ARCAS vs baseline.
+
+Paper: ARCAS turns ~1e8 remote accesses into ~1e3-1e5 while local accesses
+grow (SSSP: remote 2.3e8 -> 6e3).  Here: per-step bytes classified
+local-group vs cross-group for the ARCAS layout vs a chiplet-agnostic
+layout that stripes every replica ACROSS groups (round-robin device order —
+the worst-case the paper attributes to NUMA-only placement).
+Dry-run-derived numbers (HLO collectives) are appended when available.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row, time_call
+from repro.configs import SHAPES, get_config
+from repro.core.costmodel import best_layout, estimate
+from repro.core.layout import layout_family
+from repro.core.topology import production_topology
+
+WORKLOADS = [("llama3-8b", "train_4k"), ("mixtral-8x22b", "train_4k"),
+             ("mamba2-780m", "train_4k"), ("seamless-m4t-large-v2", "train_4k"),
+             ("grok-1-314b", "decode_32k"), ("recurrentgemma-9b", "prefill_32k")]
+
+
+def run():
+    topo = production_topology()
+    fam = layout_family(topo)
+    rows = []
+    us = None
+    for arch, shape_name in WORKLOADS:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        f = lambda: estimate(cfg, shape, best_layout(cfg, shape, fam))
+        if us is None:
+            us = time_call(f)
+        arcas = f()
+        # chiplet-agnostic baseline: the fully-spread layout (every
+        # replica's TP ring crosses all group boundaries, as when placement
+        # ignores the sub-NUMA hierarchy)
+        agnostic = estimate(cfg, shape, fam[-1])
+        agnostic_remote = agnostic.remote_bytes + agnostic.local_bytes * 0.0 \
+            + agnostic.remote_bytes
+        rows.append(row(
+            f"tab1_access/{arch}_{shape_name}", us,
+            f"arcas_local_GB={arcas.local_bytes/1e9:.2f};"
+            f"arcas_remote_GB={arcas.remote_bytes/1e9:.3f};"
+            f"agnostic_remote_GB={agnostic.remote_bytes/1e9:.2f};"
+            f"reduction={(agnostic.remote_bytes+1)/(arcas.remote_bytes+1):.0f}x"))
+    # dry-run-derived (single-pod records)
+    dr = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+    for f in sorted(glob.glob(os.path.join(dr, "*pod1.json")))[:40]:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        c = rec["collectives"]["per_class_bytes"]
+        rows.append(row(
+            f"tab1_access_hlo/{rec['arch']}_{rec['shape']}", 0.0,
+            f"intra_group_GB={c.get('intra_group', 0)/1e9:.2f};"
+            f"cross_group_GB={c.get('intra_pod', 0)/1e9:.2f}"))
+    return rows

@@ -1,0 +1,42 @@
+"""Tab. 2 / Fig. 8 analogue (StreamCluster vs Shoal): contention on the
+shared per-group resource vs core count.
+
+Paper: Shoal's sequential task-to-core fill packs 16 cores into 2 chiplets
+(2x32 MB L3, heavy main-memory traffic) while ARCAS spreads them over all
+8 chiplets (8x32 MB).  On TPU the shared-per-group resource is the
+group's intra-row ICI bandwidth: packing k active chips into few groups
+concentrates their collective traffic on those rows' links, while ARCAS's
+spread placement balances per-link load.  Reported: per-link load ratio
+and the modeled collective-time gap, closing as chips -> full pod (the
+paper's convergence at 64 cores).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.core.topology import ChipletTopology
+
+BYTES_PER_CHIP = 1e9     # collective bytes each active chip moves per step
+
+
+def run():
+    topo = ChipletTopology(n_pods=1, groups_per_pod=16, chips_per_group=16)
+    us = time_call(lambda: ChipletTopology())
+    rows = []
+    for chips in (16, 32, 64, 128, 256):
+        # Shoal-analogue: sequential fill -> ceil(chips/16) groups fully packed
+        groups_shoal = max(1, chips // topo.chips_per_group)
+        load_shoal = (chips / groups_shoal) * BYTES_PER_CHIP   # per-row load
+        # ARCAS: round-robin across all 16 groups
+        groups_arcas = min(16, chips)
+        load_arcas = (chips / groups_arcas) * BYTES_PER_CHIP
+        t_shoal = load_shoal / topo.bandwidth("intra_group")
+        t_arcas = load_arcas / topo.bandwidth("intra_group")
+        rows.append(row(
+            f"tab2_memory_hierarchy/{chips}chips", us,
+            f"shoal_row_load_GB={load_shoal/1e9:.1f};"
+            f"arcas_row_load_GB={load_arcas/1e9:.1f};"
+            f"gap={t_shoal/t_arcas:.1f}x"))
+    rows.append(row(
+        "tab2_memory_hierarchy/converges", us,
+        "gap 16x@16chips -> 1x@256chips (paper: Shoal==ARCAS at 64 cores)"))
+    return rows

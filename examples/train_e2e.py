@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model for a few
+hundred steps with the full stack — sharded data pipeline, AdamW, atomic
+checkpoints, ARCAS controller, straggler detection.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume
+
+~100M config: 12L x d768 (12H, kv=4) x ff2048, vocab 32768 ->
+  params = 32768*768*2 + 12*(768*12*64*2 + 768*4*64*2 + 3*768*2048) = ~116M
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import REGISTRY
+from repro.core.topology import ChipletTopology
+from repro.data.pipeline import (ShardedLoader, SyntheticCorpus,
+                                 write_corpus_shards)
+from repro.models.params import n_params
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def model_100m():
+    return dataclasses.replace(
+        REGISTRY["llama3-8b"],
+        name="llama-100m", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32768,
+        param_dtype="float32", compute_dtype="float32",
+        attn_block_q=128, attn_block_kv=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    print(f"model: {cfg.name}, {n_params(cfg)/1e6:.0f}M params")
+
+    if not args.resume:
+        shutil.rmtree(args.workdir, ignore_errors=True)
+    corpus = SyntheticCorpus(cfg.vocab, seed=1234)
+    files = write_corpus_shards(f"{args.workdir}/data", corpus,
+                                n_shards=8, tokens_per_shard=2_000_000)
+    loader = ShardedLoader(files, seq_len=args.seq, batch=args.batch)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    topo = ChipletTopology()
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=50, ckpt_dir=f"{args.workdir}/ckpt",
+        log_every=10, async_ckpt=True,
+        opt=AdamWConfig(peak_lr=3e-4, warmup_steps=30,
+                        total_steps=args.steps))
+    trainer = Trainer(cfg, mesh, loader, tcfg, topology=topo)
+    if args.resume:
+        trainer.resume_if_possible()
+    out = trainer.run()
+    lo = np.mean(out["losses"][:10])
+    hi = np.mean(out["losses"][-10:])
+    tput = args.batch * args.seq * len(out["losses"]) / out["wall"]
+    print(f"done: steps={out['steps']} loss {lo:.3f} -> {hi:.3f} "
+          f"({tput:.0f} tok/s, stragglers={len(out['straggler_events'])})")
+    assert hi < lo, "loss must decrease over a few hundred steps"
+
+
+if __name__ == "__main__":
+    main()

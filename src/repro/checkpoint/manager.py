@@ -1,0 +1,150 @@
+"""Checkpointing: atomic, async, elastic (reshard-on-load).
+
+Layout: <dir>/step_<N>/  with one .npy per pytree leaf (path-flattened
+names) + manifest.json (paths, shapes, dtypes, step, user metadata).
+Writes go to <dir>/.tmp_step_<N> then os.rename — a crashed writer never
+corrupts the latest checkpoint (restart-safe).  ``async_save`` runs the
+serialization on a writer thread; ``wait()`` joins before the next save.
+
+Elastic restore: leaves are loaded host-side and ``jax.device_put`` onto
+whatever mesh/shardings the *restoring* job uses — a checkpoint written on
+a (data=16, model=16) layout restores onto (data=8, model=32), a different
+spread_rate, or a degraded 255-chip sub-mesh without conversion.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize/cast bf16 natively: store as a uint16 view
+_VIEW_AS = {"bfloat16": np.uint16}
+_VIEW_BACK = {"bfloat16": ml_dtypes.bfloat16}
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_pytree(path: str, tree, *, metadata: Optional[Dict] = None):
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"leaves": [], "metadata": metadata or {}}
+    for name, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        fname = name.replace("/", "__") + ".npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name in _VIEW_AS:
+            np.save(os.path.join(tmp, fname), arr.view(_VIEW_AS[dtype_name]))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": name, "file": fname, "shape": list(arr.shape),
+             "dtype": dtype_name})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_pytree(path: str, like, *, shardings=None):
+    """Restore into the structure of ``like`` (values replaced).
+
+    ``shardings``: optional matching pytree of NamedShardings — leaves are
+    device_put directly to their (possibly different) target layout.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    names = [n for n, _ in _flatten_with_paths(like)]
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for name, leaf, shd in zip(names, leaves_like, shard_leaves):
+        e = by_path[name]
+        arr = np.load(os.path.join(path, e["file"]))
+        if e["dtype"] in _VIEW_BACK:
+            arr = arr.view(_VIEW_BACK[e["dtype"]])
+        tgt_dtype = getattr(leaf, "dtype", arr.dtype)
+        if str(tgt_dtype) in _VIEW_BACK and str(arr.dtype) not in _VIEW_BACK:
+            arr = arr.astype(np.float32)
+        arr = arr.astype(tgt_dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.match(r"step_(\d+)$", d)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, *, metadata: Optional[Dict] = None,
+             blocking: bool = True):
+        meta = dict(metadata or {}, step=step)
+        # pull to host before handing to the writer thread
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if blocking:
+            save_pytree(self._step_dir(step), host_tree, metadata=meta)
+            self._gc()
+        else:
+            self.wait()
+
+            def _run():
+                save_pytree(self._step_dir(step), host_tree, metadata=meta)
+                self._gc()
+
+            self._thread = threading.Thread(target=_run, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like, *, step: Optional[int] = None, shardings=None):
+        self.wait()
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(self._step_dir(step), like, shardings=shardings)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

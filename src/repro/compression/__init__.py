@@ -1,0 +1,3 @@
+from repro.compression.grad_compress import (
+    CompressionState, init_compression, int8_compress_transform,
+    topk_compress_transform)

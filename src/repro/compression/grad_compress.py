@@ -1,0 +1,89 @@
+"""Cross-pod gradient compression with error feedback.
+
+At 2+ pods the DP gradient reduction crosses DCN (~6.25 GB/s/chip vs
+50 GB/s ICI), so the pod axis is the compression target:
+
+  int8:  g_q = round(g / s) with per-row absmax scale s; residual
+         (g - dequant(g_q)) is carried in an error-feedback buffer and
+         added before the next step's quantization — unbiased over time,
+         8x byte reduction on the wire (int8 + 1 f32 scale per row).
+  top-k: keep the k largest-|g| entries per row, EF for the rest.
+
+In-graph we quantize -> (the psum happens on dequantized values under
+GSPMD) -> the *numerics* match what a real int8 DCN allreduce produces;
+the byte saving is claimed only for the cross-pod hop and is reported by
+the cost model, not the HLO parse (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_compression(params) -> Dict[str, Any]:
+    """Error-feedback buffers, zero-initialized, param-shaped (f32)."""
+    return {"ef": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def _int8_roundtrip(g):
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q * scale
+
+
+def _topk_roundtrip(g, frac: float):
+    k = max(1, int(g.shape[-1] * frac))
+    thresh = jnp.sort(jnp.abs(g), axis=-1)[..., -k][..., None]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def _make_transform(roundtrip: Callable, state: Dict[str, Any]
+                    ) -> Tuple[Callable, Callable]:
+    """Returns (grad_transform, new_state_fn) pair for make_train_step.
+
+    grad_transform is stateless per call; the caller threads the EF state
+    (see runtime.trainer).
+    """
+
+    def transform(grads, ef):
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            gq = roundtrip(gf)
+            return gq.astype(g.dtype), gf - gq
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_e = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_g, new_e
+
+    return transform
+
+
+def int8_compress_transform(grads, ef):
+    """(grads, ef) -> (compressed grads, new ef)."""
+    return _make_transform(_int8_roundtrip, {})(grads, ef)
+
+
+def topk_compress_transform(grads, ef, frac: float = 0.1):
+    return _make_transform(lambda g: _topk_roundtrip(g, frac), {})(grads, ef)
+
+
+def compressed_bytes_per_row(n: int) -> float:
+    """Wire bytes for one row of n f32 grads under int8+scale."""
+    return n * 1 + 4
+
+
+@dataclasses.dataclass
+class CompressionState:
+    ef: Any
+
+    @classmethod
+    def init(cls, params):
+        return cls(**init_compression(params))

@@ -1,0 +1,18 @@
+"""ARCAS core: the paper's contribution adapted to TPU pods.
+
+topology   — chiplet-group model of the fleet (Fig. 2/3)
+counters   — §4.5 profiler (libpfm -> HLO/step-clock)
+controller — Algorithm 1 + approaches/policies (§4.1-4.3)
+layout     — Algorithm 2 + mesh/PartitionSpec synthesis
+costmodel  — three-term roofline objective
+tasks      — §4.4 coroutines + chiplet-first work stealing
+scheduler  — global scheduler (migration via device_put)
+api        — §4.6 developer API (ARCAS_Init/run/all_do/call/barrier)
+"""
+from repro.core.topology import ChipletTopology, HardwareSpec, production_topology
+from repro.core.counters import PerfCounters
+from repro.core.layout import Layout, layout_family, update_location
+from repro.core.controller import AdaptiveController, ControllerConfig
+from repro.core.costmodel import estimate, best_layout, StepCost
+from repro.core.tasks import Task, TaskRuntime
+from repro.core.scheduler import GlobalScheduler, migrate_pytree

@@ -1,0 +1,107 @@
+"""Performance counters — the paper's §4.5 profiler, libpfm replaced by
+compiler-derived traffic classes + wall-clock step timing.
+
+Counter names mirror Tab. 1/2 of the paper:
+  local_bytes   — HBM traffic served within the replica's own chiplet groups
+  remote_bytes  — collective bytes crossing group boundaries within a pod
+                  (the "remote NUMA chiplet" / cache-fill event analogue;
+                  this is what Algorithm 1 thresholds on)
+  dcn_bytes     — cross-pod traffic (the "main memory" analogue)
+
+Counters are cheap (plain floats), support scoped segments (the paper's
+"profile only specific code segments"), and keep a ring buffer of recent
+step samples for rate estimation.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import time
+from typing import Deque, Dict, Optional
+
+
+@dataclasses.dataclass
+class StepSample:
+    t: float
+    step_time: float
+    local_bytes: float
+    remote_bytes: float
+    dcn_bytes: float
+    flops: float
+
+
+class PerfCounters:
+    def __init__(self, window: int = 64, clock=time.monotonic):
+        self._clock = clock
+        self._window = window
+        self.reset()
+
+    # -- event API ----------------------------------------------------------
+    def reset(self):
+        self.totals: Dict[str, float] = collections.defaultdict(float)
+        self.samples: Deque[StepSample] = collections.deque(maxlen=self._window)
+        self._epoch = self._clock()
+        self._last_reset = self._clock()
+
+    def add(self, name: str, value: float):
+        self.totals[name] += value
+
+    def record_step(self, *, step_time: float, local_bytes: float = 0.0,
+                    remote_bytes: float = 0.0, dcn_bytes: float = 0.0,
+                    flops: float = 0.0):
+        self.add("steps", 1)
+        self.add("local_bytes", local_bytes)
+        self.add("remote_bytes", remote_bytes)
+        self.add("dcn_bytes", dcn_bytes)
+        self.add("flops", flops)
+        self.samples.append(StepSample(self._clock(), step_time, local_bytes,
+                                       remote_bytes, dcn_bytes, flops))
+
+    # -- Algorithm 1 inputs ---------------------------------------------------
+    def event_counter(self, name: str = "remote_bytes") -> float:
+        """Value accumulated since the last ``reset_events`` (Alg.1 line 5)."""
+        return self.totals[name] - self.totals.get(name + "__mark", 0.0)
+
+    def reset_events(self, name: str = "remote_bytes"):
+        self.totals[name + "__mark"] = self.totals[name]
+
+    def elapsed(self) -> float:
+        return self._clock() - self._last_reset
+
+    def mark_time(self):
+        self._last_reset = self._clock()
+
+    # -- derived metrics ------------------------------------------------------
+    def ema_step_time(self, alpha: float = 0.25) -> Optional[float]:
+        if not self.samples:
+            return None
+        ema = self.samples[0].step_time
+        for s in self.samples:
+            ema = alpha * s.step_time + (1 - alpha) * ema
+        return ema
+
+    def rates(self) -> Dict[str, float]:
+        if len(self.samples) < 2:
+            return {}
+        dt = max(self.samples[-1].t - self.samples[0].t, 1e-9)
+        n = len(self.samples)
+        return {
+            "steps_per_s": n / dt,
+            "remote_bytes_per_s": sum(s.remote_bytes for s in self.samples) / dt,
+            "local_bytes_per_s": sum(s.local_bytes for s in self.samples) / dt,
+            "dcn_bytes_per_s": sum(s.dcn_bytes for s in self.samples) / dt,
+        }
+
+    # -- scoped segment profiling (paper: "monitor only specific segments") ---
+    @contextlib.contextmanager
+    def segment(self, name: str):
+        t0 = self._clock()
+        try:
+            yield
+        finally:
+            self.add(f"segment/{name}/time", self._clock() - t0)
+            self.add(f"segment/{name}/calls", 1)
+
+    def snapshot(self) -> Dict[str, float]:
+        return dict(self.totals)

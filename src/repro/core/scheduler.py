@@ -1,0 +1,80 @@
+"""Global scheduler (paper §4.1 component 4).
+
+Owns the adaptive controller, the coroutine runtime and the current Layout;
+applies policies by *migrating* state: on a spread-rate change the params /
+optimizer / cache pytrees are ``jax.device_put`` to the new mesh's
+NamedShardings at a step boundary (the TPU analogue of moving threads and
+rebinding memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.controller import AdaptiveController, ControllerConfig, Decision
+from repro.core.counters import PerfCounters
+from repro.core.layout import Layout
+from repro.core.tasks import TaskRuntime
+from repro.core.topology import ChipletTopology
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    step: int
+    decision: Decision
+    seconds: float
+
+
+class GlobalScheduler:
+    def __init__(self, topology: ChipletTopology,
+                 controller_cfg: Optional[ControllerConfig] = None,
+                 *, spread_rate: int = 1, pod_axis: bool = False,
+                 cost_fn=None, working_set_fn=None,
+                 counters: Optional[PerfCounters] = None):
+        self.topology = topology
+        self.counters = counters or PerfCounters()
+        self.controller = AdaptiveController(
+            topology, controller_cfg or ControllerConfig(),
+            spread_rate=spread_rate, pod_axis=pod_axis,
+            cost_fn=cost_fn, working_set_fn=working_set_fn)
+        self.tasks = TaskRuntime(
+            n_pods=topology.n_pods, groups_per_pod=topology.groups_per_pod,
+            counters=self.counters)
+        self.migrations: List[MigrationEvent] = []
+        self._step = 0
+
+    # ------------------------------------------------------------------
+    def layout(self) -> Layout:
+        return self.controller.layout()
+
+    def after_step(self, *, step_metrics: Optional[Dict[str, float]] = None,
+                   migrate_fn: Optional[Callable[[Layout], None]] = None
+                   ) -> Optional[Decision]:
+        """Call once per training/serving step; may trigger a relayout.
+
+        ``migrate_fn(new_layout)`` performs the actual state movement
+        (device_put of the param/opt/cache pytrees onto the new mesh).
+        """
+        self._step += 1
+        if step_metrics:
+            self.counters.record_step(
+                step_time=step_metrics.get("step_time", 0.0),
+                local_bytes=step_metrics.get("local_bytes", 0.0),
+                remote_bytes=step_metrics.get("remote_bytes", 0.0),
+                dcn_bytes=step_metrics.get("dcn_bytes", 0.0),
+                flops=step_metrics.get("flops", 0.0))
+        decision = self.controller.maybe_reschedule(self.counters)
+        if decision is not None and migrate_fn is not None:
+            t0 = time.monotonic()
+            migrate_fn(self.layout())
+            self.migrations.append(
+                MigrationEvent(self._step, decision, time.monotonic() - t0))
+        return decision
+
+
+def migrate_pytree(tree: Any, shardings: Any) -> Any:
+    """Reshard a pytree of arrays onto new NamedShardings (task migration)."""
+    return jax.device_put(tree, shardings)

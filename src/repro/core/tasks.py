@@ -1,0 +1,176 @@
+"""Lightweight concurrency (paper §4.4): coroutine tasks + chiplet-first
+work stealing.
+
+Tasks are Python generators (user-level continuations with developer-defined
+yield points — the coroutine model of the paper).  Each *worker* owns a
+deque; a worker whose deque is empty steals: first from workers in the SAME
+chiplet group, then same pod, then anywhere — the locality-preserving steal
+order of §4.4.  The runtime is cooperative and deterministic (seeded steal
+order) so schedulers built on it are testable; at yield points the
+integrated profiler hook fires (§4.4: "when a coroutine yields, ARCAS's
+profiling system activates").
+
+On TPU the "work" scheduled here is host-side: serving requests,
+prefill/decode micro-steps, data prefetch, checkpoint IO.  Device compute
+stays inside XLA programs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import random
+import time
+from typing import Any, Callable, Deque, Dict, Generator, List, Optional
+
+from repro.core.counters import PerfCounters
+
+
+@dataclasses.dataclass
+class TaskStats:
+    spawned_at: float = 0.0
+    yields: int = 0
+    steals: int = 0
+    finished_at: Optional[float] = None
+
+
+class Task:
+    _ids = itertools.count()
+
+    def __init__(self, gen: Generator, *, group: Optional[int] = None,
+                 name: str = ""):
+        if not isinstance(gen, Generator):
+            raise TypeError("Task wraps a generator (coroutine with yields)")
+        self.id = next(Task._ids)
+        self.gen = gen
+        self.group = group              # preferred chiplet group (affinity)
+        self.name = name or f"task{self.id}"
+        self.stats = TaskStats(spawned_at=time.monotonic())
+        self.result: Any = None
+        self.done = False
+
+    def step(self) -> bool:
+        """Advance to the next yield point.  True if finished."""
+        try:
+            next(self.gen)
+            self.stats.yields += 1
+            return False
+        except StopIteration as e:
+            self.result = getattr(e, "value", None)
+            self.done = True
+            self.stats.finished_at = time.monotonic()
+            return True
+
+
+class Worker:
+    def __init__(self, wid: int, group: int, pod: int):
+        self.wid = wid
+        self.group = group
+        self.pod = pod
+        self.deque: Deque[Task] = collections.deque()
+        self.executed_steps = 0
+        self.stolen = 0
+
+    def push(self, task: Task):
+        self.deque.append(task)
+
+    def pop_local(self) -> Optional[Task]:
+        return self.deque.pop() if self.deque else None     # LIFO own end
+
+    def steal_from(self) -> Optional[Task]:
+        return self.deque.popleft() if self.deque else None  # FIFO victim end
+
+
+class TaskRuntime:
+    """Cooperative scheduler over per-group workers with locality stealing."""
+
+    def __init__(self, *, n_pods: int = 1, groups_per_pod: int = 16,
+                 workers_per_group: int = 1, seed: int = 0,
+                 counters: Optional[PerfCounters] = None,
+                 profile_hook: Optional[Callable[[Task], None]] = None):
+        self.counters = counters or PerfCounters()
+        self.profile_hook = profile_hook
+        self.workers: List[Worker] = []
+        for pod in range(n_pods):
+            for g in range(groups_per_pod):
+                for _ in range(workers_per_group):
+                    gid = pod * groups_per_pod + g
+                    self.workers.append(Worker(len(self.workers), gid, pod))
+        self._rng = random.Random(seed)
+        self._rr = 0
+        self.steal_log: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def spawn(self, gen: Generator, *, group: Optional[int] = None,
+              name: str = "") -> Task:
+        task = Task(gen, group=group, name=name)
+        w = self._home_worker(task)
+        w.push(task)
+        self.counters.add("tasks_spawned", 1)
+        return task
+
+    def _home_worker(self, task: Task) -> Worker:
+        if task.group is not None:
+            cands = [w for w in self.workers if w.group == task.group]
+            if cands:
+                return min(cands, key=lambda w: len(w.deque))
+        self._rr = (self._rr + 1) % len(self.workers)
+        return self.workers[self._rr]
+
+    # -- §4.4 steal order: same group, then same pod, then anywhere --------
+    def _steal(self, thief: Worker) -> Optional[Task]:
+        tiers = (
+            [w for w in self.workers
+             if w is not thief and w.group == thief.group],
+            [w for w in self.workers
+             if w.group != thief.group and w.pod == thief.pod],
+            [w for w in self.workers if w.pod != thief.pod],
+        )
+        for tier_name, tier in zip(("group", "pod", "fleet"), tiers):
+            victims = [w for w in tier if w.deque]
+            if victims:
+                victim = self._rng.choice(victims)
+                task = victim.steal_from()
+                if task is not None:
+                    thief.stolen += 1
+                    task.stats.steals += 1
+                    self.counters.add(f"steals_{tier_name}", 1)
+                    # cross-group steal = remote traffic (counter feed)
+                    if tier_name != "group":
+                        self.counters.add("remote_bytes", 1.0)
+                    self.steal_log.append(
+                        {"thief": thief.wid, "victim": victim.wid,
+                         "tier": tier_name, "task": task.id})
+                    return task
+        return None
+
+    # ------------------------------------------------------------------
+    def run(self, *, max_rounds: int = 10_000_000,
+            concurrency_trace: Optional[List[int]] = None) -> None:
+        """Drive all tasks to completion (cooperative round-robin)."""
+        pending = True
+        rounds = 0
+        while pending and rounds < max_rounds:
+            pending = False
+            rounds += 1
+            active = 0
+            for w in self.workers:
+                task = w.pop_local() or self._steal(w)
+                if task is None:
+                    continue
+                active += 1
+                pending = True
+                finished = task.step()
+                w.executed_steps += 1
+                if self.profile_hook is not None:
+                    self.profile_hook(task)           # yield-point profiling
+                if not finished:
+                    w.push(task)
+            if concurrency_trace is not None:
+                concurrency_trace.append(active)
+        if pending:
+            raise RuntimeError("TaskRuntime.run exceeded max_rounds")
+
+    def barrier(self):
+        """Paper API: run everything currently queued to completion."""
+        self.run()

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticCorpus, ShardedLoader, make_batch,
+                                 write_corpus_shards)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel subpackage has: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper, custom_vjp where trained through), and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,68 @@
+"""Jit'd public wrapper: GQA flash attention with custom VJP.
+
+``flash_attention(q, k, v)`` takes model-layout tensors (B, S, H, dh) and
+handles head-major reshaping, GQA head mapping, and the Pallas fwd/bwd
+kernels.  ``interpret=True`` (default on CPU) runs the kernel bodies in
+interpret mode for validation; on TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _to_head_major(x):
+    B, S, H, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+
+
+def _from_head_major(x, B, H):
+    BH, S, dh = x.shape
+    return x.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, block_q=256,
+                    block_kv=256, interpret=True):
+    """q: (B,S,Hq,dh); k/v: (B,Skv,Hkv,dh) -> (B,S,Hq,dh)."""
+    out, _ = _fwd(q, k, v, causal, window, block_q, block_kv, interpret)
+    return out
+
+
+def _fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = _to_head_major(q)
+    kf = _to_head_major(k)
+    vf = _to_head_major(v)
+    out, lse = K.flash_attention_fwd(
+        qf, kf, vf, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, hq_per_kv=G, interpret=interpret)
+    return _from_head_major(out, B, Hq), (qf, kf, vf, out, lse, B, Hq, Hkv)
+
+
+def _fwd_rule(q, k, v, causal, window, block_q, block_kv, interpret):
+    out, res = _fwd(q, k, v, causal, window, block_q, block_kv, interpret)
+    return out, res
+
+
+def _bwd_rule(causal, window, block_q, block_kv, interpret, res, g):
+    qf, kf, vf, outf, lse, B, Hq, Hkv = res
+    G = Hq // Hkv
+    gf = _to_head_major(g)
+    dq, dk, dv = K.flash_attention_bwd(
+        qf, kf, vf, outf, lse, gf, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, hq_per_kv=G,
+        interpret=interpret)
+    return (_from_head_major(dq, B, Hq),
+            _from_head_major(dk, B, Hkv),
+            _from_head_major(dv, B, Hkv))
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes scores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (BH, Sq, dh); k/v: (BH, Skv, dh) — heads pre-flattened & pre-mapped.
+
+    Returns (out (BH, Sq, dh) in q.dtype, lse (BH, Sq) f32).
+    """
+    BH, Sq, dh = q.shape
+    Skv = k.shape[1]
+    scale = dh ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    lse = m + jnp.log(l)
+    out = jnp.einsum("bqk,bkd->bqd", p / l[..., None], v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype), lse
+
+
+def gqa_flatten(q, k, v):
+    """(B,S,Hq,dh)/(B,S,Hkv,dh) -> head-major (B*Hq,S,dh) with kv repeated."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * Hq, -1, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * Hq, -1, dh)
+    return qf, kf, vf
+
+
+def gqa_attention_ref(q, k, v, *, causal=True, window=0):
+    """(B,S,Hq,dh) GQA oracle returning (B,S,Hq,dh)."""
+    B, Sq, Hq, dh = q.shape
+    qf, kf, vf = gqa_flatten(q, k, v)
+    out, _ = attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(B, Hq, Sq, dh).transpose(0, 2, 1, 3)

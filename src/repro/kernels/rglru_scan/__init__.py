@@ -1,0 +1,2 @@
+from repro.kernels.rglru_scan.ops import lru
+from repro.kernels.rglru_scan.kernel import lru_scan

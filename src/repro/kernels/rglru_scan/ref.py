@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t,  naive sequential scan over time (exact).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def lru_scan_ref(a, b, h0=None):
+    """a, b: (B, S, W) f32 -> h: (B, S, W); returns (h, h_final)."""
+    B, S, W = a.shape
+    h0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hT, hs = lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), hT

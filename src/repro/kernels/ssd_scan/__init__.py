@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd, ssd_with_state
+from repro.kernels.ssd_scan.kernel import ssd_scan

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD selective scan: naive per-timestep recurrence.
+
+State h: (B, H, P, N);  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+Output  y_t = C_t . h_t  (+ D skip handled by the model, not here).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x, dt, A, B_, C_, h0=None):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); B_/C_: (B,S,G,N) -> y, h_final."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(C_.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                     # (B,H,P), (B,H), (B,H,N) x2
+        decay = jnp.exp(dtt * Af[None])           # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", Bt, xt, dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    hT, ys = lax.scan(step, h, (xf.transpose(1, 0, 2, 3),
+                                dtf.transpose(1, 0, 2),
+                                Bf.transpose(1, 0, 2, 3),
+                                Cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3), hT

@@ -1,0 +1,464 @@
+"""Decomposed FLOP/byte accounting for the roofline.
+
+``cost_analysis()`` counts while-loop bodies once, so the full scanned step
+under-reports layer work by ~n_layers.  Instead we lower ONE layer of each
+block type (attention block-loops statically unrolled, MoE token blocks
+unrolled) on the same mesh/shardings, take its per-device cost, and combine:
+
+    flops_dev = sum_type  count_type * k * flops_layer(B_eff)
+    bytes_dev = sum_type  count_type * (W_local + k * (bytes_layer - W_local))
+
+where B_eff is a reduced batch (1 sample per batch shard) and k the exact
+linear scale back to the full batch — exact for everything linear in batch
+(attention is quadratic in S but linear in B, so S stays full).  W_local
+(per-device weight bytes) is computed exactly from the PartitionSpecs.
+
+Analysis attention blocks are 2048x2048 — a realistic v5e VMEM-resident
+flash-kernel tile, so the KV re-read factor in the byte term matches the
+kernel the model would actually run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as sh
+from repro.launch.inputs import seq_split, ENCDEC_SRC_LEN
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import decode as dec
+from repro.models.params import ParamDef, layer_def, model_def
+
+ANALYSIS_BLOCK = 2048
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _leaf_specs_for_layer(cfg, mesh, fsdp, ltype):
+    """PartitionSpecs for ONE layer (no leading 'layer' axis)."""
+    rules = sh.axis_rules(cfg, mesh, fsdp=fsdp)
+    ldef = layer_def(cfg, ltype)
+
+    def to_spec(pd: ParamDef):
+        spec, used = [], set()
+        for ax in pd.axes:
+            m = rules.get(ax)
+            if m is None or m in used:
+                spec.append(None)
+            else:
+                spec.append(m)
+                used.add(m)
+        return P(*spec)
+
+    return (jax.tree.map(to_spec, ldef, is_leaf=_is_def), ldef)
+
+
+def _abstract_layer(cfg, mesh, specs, ldef):
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(
+        lambda pd, s: jax.ShapeDtypeStruct(pd.shape, dt,
+                                           sharding=NamedSharding(mesh, s)),
+        ldef, specs, is_leaf=_is_def)
+
+
+def _local_weight_bytes(cfg, mesh, specs, ldef) -> float:
+    """Exact per-device bytes of one layer's weights under the specs."""
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    total = 0.0
+    for pd, spec in zip(jax.tree.leaves(ldef, is_leaf=_is_def),
+                        jax.tree.leaves(specs,
+                                        is_leaf=lambda x: isinstance(x, P))):
+        shard = 1
+        for ax in spec:
+            if ax is not None:
+                shard *= mesh.shape[ax]
+        total += math.prod(pd.shape) * itemsize / shard
+    return total
+
+
+def _batch_shards(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _bspec(mesh, B):
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(b) if B % _batch_shards(mesh) == 0 and B >= _batch_shards(mesh) \
+        else P()
+
+
+@dataclasses.dataclass
+class LayerCost:
+    flops: float          # per device, full batch
+    bytes: float          # per device, full batch
+
+
+def _analysis_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses as dc
+    return dc.replace(cfg, attn_block_q=ANALYSIS_BLOCK,
+                      attn_block_kv=ANALYSIS_BLOCK,
+                      moe_block=min(cfg.moe_block, 2048))
+
+
+def _cost_of(fn, *args, mesh=None) -> Tuple[float, float]:
+    if mesh is not None:
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+    else:
+        compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def layer_cost(cfg: ModelConfig, shape: ShapeConfig, mesh, *, fsdp: bool,
+               ltype: str, train: bool, hybrid: bool = False,
+               seq_len: Optional[int] = None) -> LayerCost:
+    """Per-device cost of one block of ``ltype`` at the cell's shape."""
+    acfg = _analysis_cfg(cfg)
+    B = shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    shards = _batch_shards(mesh)
+    if shape.is_decode:
+        B_eff, k = B, 1.0
+        S_eff = 1
+    else:
+        B_eff = shards if B % shards == 0 and B >= shards else B
+        k = B / B_eff
+        S_eff = S
+
+    specs, ldef = _leaf_specs_for_layer(acfg, mesh, fsdp, ltype)
+    lp = _abstract_layer(acfg, mesh, specs, ldef)
+    bspec = _bspec(mesh, B_eff)
+    xs = jax.ShapeDtypeStruct(
+        (B_eff, S_eff, cfg.d_model), jnp.dtype(cfg.compute_dtype),
+        sharding=NamedSharding(mesh, P(*bspec, None, None)))
+
+    window = (cfg.local_window if hybrid else cfg.window) if ltype == "attn" \
+        else 0
+
+    if shape.is_decode:
+        lc = dec._layer_cache(acfg, ltype, B_eff,
+                              min(S, window) if window else S,
+                              hybrid=hybrid)
+        cspecs = sh.cache_specs(acfg, mesh, {"layers": lc})["layers"]
+        lc = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            jax.eval_shape(lambda: lc), cspecs)
+        pos = jax.ShapeDtypeStruct((B_eff,), jnp.int32,
+                                   sharding=NamedSharding(mesh, bspec))
+
+        def f(x, lp, lc, pos):
+            rope1 = (None if acfg.rope_type == "none" else
+                     L.rope_tables(pos[:, None], acfg.head_dim,
+                                   acfg.rope_theta))
+            return dec._decode_layer(x, lp, lc, acfg, ltype, rope1, pos,
+                                     hybrid=hybrid)
+
+        flops, bts = _cost_of(f, xs, lp, lc, pos, mesh=mesh)
+        return LayerCost(flops * k, bts * k)
+
+    rope_static = None
+    if acfg.rope_type == "rope" or (acfg.rope_type == "mrope"):
+        # rope tables computed outside the layer in the real model; cheap
+        rope_static = L.rope_tables(
+            jnp.arange(S_eff)[None].astype(jnp.int32) *
+            jnp.ones((B_eff, 1), jnp.int32), acfg.head_dim, acfg.rope_theta)
+
+    def fwd(x, lp):
+        y, _, aux = T.apply_layer(x, lp, acfg, "attn" if ltype == "enc"
+                                  else ltype, rope_static, window=window,
+                                  unroll=True, causal=ltype != "enc")
+        return y
+
+    if not train:
+        flops, bts = _cost_of(fwd, xs, lp, mesh=mesh)
+    else:
+        body = fwd
+        if cfg.remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat == "full" else
+                      jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body = jax.checkpoint(fwd, policy=policy)
+
+        def fb(x, lp, ct):
+            y, vjp = jax.vjp(body, x, lp)
+            dx, dlp = vjp(ct)
+            return y, dx, dlp
+
+        flops, bts = _cost_of(fb, xs, lp, xs, mesh=mesh)
+
+    wl = _local_weight_bytes(acfg, mesh, specs, ldef)
+    return LayerCost(flops * k, wl + k * max(bts - wl, 0.0))
+
+
+def outer_cost(cfg: ModelConfig, shape: ShapeConfig, mesh, *, fsdp: bool,
+               train: bool) -> LayerCost:
+    """Embedding + head + (train: chunked-CE loss fwd/bwd) per device."""
+    acfg = _analysis_cfg(cfg)
+    B = shape.global_batch
+    shards = _batch_shards(mesh)
+    if shape.is_decode:
+        B_eff, k, S_eff = B, 1.0, 1
+    else:
+        B_eff = shards if B % shards == 0 and B >= shards else B
+        k = B / B_eff
+        S_eff, _ = seq_split(cfg, shape.seq_len)
+
+    rules = sh.axis_rules(acfg, mesh, fsdp=fsdp)
+    V = cfg.vocab_padded
+    if cfg.tie_embeddings:
+        vspec = P("model", rules["embed"])
+    else:  # untied: d_model-sharded table (local gather)
+        vspec = P("data" if fsdp else None, "model")
+    embed = jax.ShapeDtypeStruct((V, cfg.d_model),
+                                 jnp.dtype(cfg.param_dtype),
+                                 sharding=NamedSharding(mesh, vspec))
+    pouter = {"embed": embed}
+    if not cfg.tie_embeddings:
+        pouter["head"] = jax.ShapeDtypeStruct(
+            (cfg.d_model, V), jnp.dtype(cfg.param_dtype),
+            sharding=NamedSharding(mesh, P(rules["embed"], "model")))
+    pouter["final_norm"] = jax.ShapeDtypeStruct(
+        (cfg.d_model,), jnp.dtype(cfg.param_dtype),
+        sharding=NamedSharding(mesh, P(None)))
+    bspec = _bspec(mesh, B_eff)
+    toks = jax.ShapeDtypeStruct((B_eff, S_eff), jnp.int32,
+                                sharding=NamedSharding(mesh, P(*bspec, None)))
+    xs = jax.ShapeDtypeStruct((B_eff, S_eff, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype),
+                              sharding=NamedSharding(mesh, P(*bspec, None, None)))
+
+    if shape.is_decode:
+        def f(p, tok, x):
+            e = T.embed_tokens(p, acfg, tok)
+            xn = L.rms_norm(x + 0 * e[:, :1], p["final_norm"], acfg.norm_eps)
+            return T.head_logits(p, acfg, xn[:, 0])
+        flops, bts = _cost_of(f, pouter,
+                              jax.ShapeDtypeStruct(
+                                  (B_eff, 1), jnp.int32,
+                                  sharding=NamedSharding(mesh, P(*bspec, None))),
+                              jax.ShapeDtypeStruct(
+                                  (B_eff, 1, cfg.d_model),
+                                  jnp.dtype(cfg.compute_dtype),
+                                  sharding=NamedSharding(mesh,
+                                                         P(*bspec, None, None))),
+                              mesh=mesh)
+        return LayerCost(flops * k, bts * k)
+
+    mask = jax.ShapeDtypeStruct((B_eff, S_eff), jnp.float32,
+                                sharding=NamedSharding(mesh, P(*bspec, None)))
+
+    def f(p, tok, x, tgt, m):
+        e = T.embed_tokens(p, acfg, tok)
+        xn = L.rms_norm(x + e, p["final_norm"], acfg.norm_eps)
+        return T.chunked_ce_loss(p, acfg, xn, tgt, m, unroll=True)
+
+    if train:
+        def g(p, tok, x, tgt, m):
+            loss, vjp = jax.vjp(lambda p, x: f(p, tok, x, tgt, m), p, x)
+            return loss, vjp(jnp.ones((), jnp.float32))
+        flops, bts = _cost_of(g, pouter, toks, xs, toks, mask, mesh=mesh)
+    else:
+        flops, bts = _cost_of(f, pouter, toks, xs, toks, mask, mesh=mesh)
+
+    # exact local weight bytes of embed/head
+    wl = 0.0
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"] if fsdp else 1
+    wl += cfg.vocab_padded * cfg.d_model * itemsize / (msize * dsize)
+    if not cfg.tie_embeddings:
+        wl += cfg.vocab_padded * cfg.d_model * itemsize / (msize * dsize)
+    return LayerCost(flops * k, wl + k * max(bts - wl, 0.0))
+
+
+def decomposed_cost(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                    fsdp: bool) -> Dict[str, float]:
+    """Total per-device (flops, bytes) = sum over block types + outer."""
+    train = shape.kind == "train"
+    remat_note = cfg.remat
+    counts: Dict[Tuple[str, bool], int] = {}
+    if cfg.family == "encdec":
+        counts[("enc", False)] = cfg.enc_layers
+        counts[("dec", False)] = cfg.dec_layers
+    else:
+        for lt in cfg.layer_types():
+            key = (lt, cfg.family == "hybrid")
+            counts[key] = counts.get(key, 0) + 1
+
+    flops = bts = 0.0
+    detail = {}
+    for (lt, hybrid), n in counts.items():
+        if lt == "dec":
+            lc = _decoder_layer_cost(cfg, shape, mesh, fsdp=fsdp, train=train)
+        elif lt == "enc" and not shape.is_decode:
+            _, ss = seq_split(cfg, shape.seq_len)
+            lc = layer_cost(cfg, shape, mesh, fsdp=fsdp, ltype="enc",
+                            train=train, seq_len=ss)
+        elif lt == "enc" and shape.is_decode:
+            continue  # encoder not run at decode
+        else:
+            lc = layer_cost(cfg, shape, mesh, fsdp=fsdp, ltype=lt,
+                            train=train, hybrid=hybrid)
+        flops += n * lc.flops
+        bts += n * lc.bytes
+        detail[lt] = {"n": n, "flops": lc.flops, "bytes": lc.bytes}
+
+    oc = outer_cost(cfg, shape, mesh, fsdp=fsdp, train=train)
+    flops += oc.flops
+    bts += oc.bytes
+    detail["outer"] = {"n": 1, "flops": oc.flops, "bytes": oc.bytes}
+    return {"flops_per_dev": flops, "bytes_per_dev": bts, "detail": detail,
+            "remat": remat_note}
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                       fsdp: bool, microbatches: int = 1) -> float:
+    """Per-device HBM-traffic LOWER BOUND (bytes no implementation avoids).
+
+    Counts: weight streaming (fwd + bwd-recompute + grad pass per
+    microbatch), optimizer state read/write, saved residual carries, one
+    read+write of the layer I/O activations, decode KV/state streaming.
+    Fusion cannot remove these; the HLO 'bytes accessed' metric is the
+    matching UPPER bound (every unfused operand).
+    """
+    from repro.models.params import param_bytes
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    chips = mesh.size
+    pb_local = param_bytes(cfg) / (msize * (dsize if fsdp else 1))
+    n_par = param_bytes(cfg) / 2
+
+    D = cfg.d_model
+    act_bytes = 2  # bf16
+    if shape.kind == "train":
+        tokens_local = shape.global_batch * shape.seq_len / dsize
+        # weights: fwd + bwd recompute (remat=full) + grad production
+        w = pb_local * 3 * microbatches
+        # optimizer: read m,v + params, write all (f32 moments)
+        opt = (n_par * 8 / (msize * dsize)) * 2 + pb_local * 2
+        # activations: residual carry saved+read per layer; layer I/O rw
+        acts = tokens_local * D * act_bytes * cfg.n_layers * 4
+        return w + opt + acts
+    if shape.kind == "prefill":
+        tokens_local = shape.global_batch * shape.seq_len / dsize
+        return pb_local + tokens_local * D * act_bytes * cfg.n_layers * 2
+    # decode: params once + full cache read+write
+    from repro.core.costmodel import kv_cache_bytes
+    cache_local = kv_cache_bytes(cfg, shape, shape.global_batch) / chips
+    return pb_local + 2 * cache_local
+
+
+def _decoder_layer_cost(cfg, shape, mesh, *, fsdp, train) -> LayerCost:
+    """Enc-dec decoder layer (self + cross + ffn)."""
+    acfg = _analysis_cfg(cfg)
+    B = shape.global_batch
+    shards = _batch_shards(mesh)
+    if shape.is_decode:
+        B_eff, k, S_eff = B, 1.0, 1
+        S_src = ENCDEC_SRC_LEN
+    else:
+        B_eff = shards if B % shards == 0 and B >= shards else B
+        k = B / B_eff
+        S_eff, S_src = seq_split(cfg, shape.seq_len)
+
+    specs, ldef = _leaf_specs_for_layer(acfg, mesh, fsdp, "dec")
+    lp = _abstract_layer(acfg, mesh, specs, ldef)
+    bspec = _bspec(mesh, B_eff)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xs = jax.ShapeDtypeStruct((B_eff, S_eff, cfg.d_model), cdt,
+                              sharding=NamedSharding(mesh, P(*bspec, None, None)))
+    enc = jax.ShapeDtypeStruct((B_eff, S_src, cfg.d_model), cdt,
+                               sharding=NamedSharding(mesh, P(*bspec, None, None)))
+
+    if shape.is_decode:
+        W = shape.seq_len
+        lc = {"self_c": dec._attn_cache(acfg, B_eff, W)}
+        hd = (B_eff, S_src, cfg.n_kv_heads, cfg.head_dim)
+        lc["ck"] = jnp.zeros(hd, cdt)
+        lc["cv"] = jnp.zeros(hd, cdt)
+        lc = jax.eval_shape(lambda: lc)
+        cspec = {"self_c": sh.cache_specs(acfg, mesh, {"layers": lc["self_c"]})["layers"],
+                 "ck": P(*bspec, "model" if S_src % mesh.shape["model"] == 0 else None, None, None),
+                 "cv": P(*bspec, "model" if S_src % mesh.shape["model"] == 0 else None, None, None)}
+        lc = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            lc, cspec, is_leaf=lambda x: hasattr(x, "shape"))
+        pos = jax.ShapeDtypeStruct((B_eff,), jnp.int32,
+                                   sharding=NamedSharding(mesh, bspec))
+        x1 = jax.ShapeDtypeStruct((B_eff, 1, cfg.d_model), cdt,
+                                  sharding=NamedSharding(mesh, P(*bspec, None, None)))
+
+        def f(x, lp, lc, pos):
+            rope1 = L.rope_tables(pos[:, None], acfg.head_dim, acfg.rope_theta)
+            # reuse the decode body from decode_step's encdec branch
+            xin = L.rms_norm(x, lp["ln1"], acfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wq"]).astype(x.dtype)
+            kk = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wk"]).astype(x.dtype)
+            vv = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wv"]).astype(x.dtype)
+            kc, vc = L.cache_update(lc["self_c"]["k"], lc["self_c"]["v"], kk, vv, pos)
+            kv_pos = L.cache_positions(pos, kc.shape[1])
+            o = L.decode_attention(q, kc, vc, kv_pos, pos)
+            h = x + T._attn_out(o, lp["attn"], x.dtype)
+            xin = L.rms_norm(h, lp["ln2"], acfg.norm_eps)
+            cq = jnp.einsum("bsd,dhk->bshk", xin, lp["cross"]["wq"]).astype(x.dtype)
+            src_pos = jnp.broadcast_to(jnp.arange(S_src)[None], (B_eff, S_src))
+            co = L.decode_attention(cq, lc["ck"], lc["cv"], src_pos,
+                                    jnp.full((B_eff,), 2**30, jnp.int32))
+            h = h + T._attn_out(co, lp["cross"], x.dtype)
+            f_, _ = T._ffn(L.rms_norm(h, lp["ln3"], acfg.norm_eps), lp, acfg)
+            return h + f_
+
+        flops, bts = _cost_of(f, x1, lp, lc, pos, mesh=mesh)
+        return LayerCost(flops * k, bts * k)
+
+    rope_static = L.rope_tables(
+        jnp.arange(S_eff)[None].astype(jnp.int32) *
+        jnp.ones((B_eff, 1), jnp.int32), acfg.head_dim, acfg.rope_theta)
+
+    def fwd(x, lp, enc_out):
+        a, _ = T.attn_block(L.rms_norm(x, lp["ln1"], acfg.norm_eps),
+                            lp["attn"], acfg, rope_static, causal=True,
+                            unroll=True)
+        h = x + a
+        cq = jnp.einsum("bsd,dhk->bshk",
+                        L.rms_norm(h, lp["ln2"], acfg.norm_eps),
+                        lp["cross"]["wq"]).astype(x.dtype)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"]).astype(x.dtype)
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"]).astype(x.dtype)
+        co = L.blocked_attention(cq, ck, cv, causal=False,
+                                 block_q=ANALYSIS_BLOCK,
+                                 block_kv=ANALYSIS_BLOCK, unroll=True)
+        h = h + T._attn_out(co, lp["cross"], x.dtype)
+        ff, _ = T._ffn(L.rms_norm(h, lp["ln3"], acfg.norm_eps), lp, acfg,
+                       unroll=True)
+        return h + ff
+
+    if train:
+        body = fwd
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                fwd, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        def fb(x, lp, enc_out, ct):
+            y, vjp = jax.vjp(body, x, lp, enc_out)
+            return vjp(ct)
+
+        flops, bts = _cost_of(fb, xs, lp, enc, xs, mesh=mesh)
+    else:
+        flops, bts = _cost_of(fwd, xs, lp, enc, mesh=mesh)
+    wl = _local_weight_bytes(acfg, mesh, specs, ldef)
+    return LayerCost(flops * k, wl + k * max(bts - wl, 0.0))

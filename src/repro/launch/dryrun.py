@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This script — and only this script — sees 512
+# placeholder CPU devices standing in for the production TPU fleet.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch import analysis as an          # noqa: E402
+from repro.launch import hlo_analysis as ha      # noqa: E402
+from repro.launch import sharding as sh          # noqa: E402
+from repro.launch.inputs import input_specs, ENCDEC_SRC_LEN  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.steps import (make_prefill, make_serve_step,   # noqa: E402
+                                make_train_step, make_train_step_smap)
+from repro.core.costmodel import model_flops     # noqa: E402
+from repro.models.params import abstract_params  # noqa: E402
+from repro.optim.adamw import AdamWConfig, init_opt_state    # noqa: E402
+from repro.optim.quantized import init_opt_state_8bit        # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shard_abstract(tree, mesh, specs):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cell_config(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, head_pad_to=16)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        # "full" remat (only the per-layer residual carry is checkpointed;
+        # the "block" dots policy would save every projection output) +
+        # 8-way microbatch gradient accumulation so saved activations scale
+        # with the microbatch.  Sequence-sharding the carry (Megatron-SP)
+        # was tried and REVERTED: GSPMD resolves the seq-sharded carry vs
+        # the q-block dynamic-slice by involuntary full rematerialization
+        # (see EXPERIMENTS.md §Perf, hypothesis log).
+        cfg = dataclasses.replace(cfg, remat="full", seq_shard=False)
+    return cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             skip_analysis: bool = False, spread_rate: int | None = None,
+             tag: str = "", train_impl: str = "gspmd",
+             microbatches: int = 8) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg, shape = cell_config(arch, shape_name)
+    if multi_pod:
+        cfg = dataclasses.replace(cfg, batch_axes=("pod", "data"))
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    fsdp = sh.needs_fsdp(cfg, shape, chips, mesh.shape["model"])
+    pspecs = sh.param_specs(cfg, mesh, fsdp=fsdp)
+    gspecs = sh.gather_specs(cfg, mesh) if fsdp else None
+    aparams = _shard_abstract(abstract_params(cfg), mesh, pspecs)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        # FSDP-scale models (grok-1): 8-bit moments, else f32 moments would
+        # not leave room for params+grads on a 16 GB chip.
+        opt_impl = "adamw8bit" if fsdp else "adamw"
+        init_fn = init_opt_state_8bit if fsdp else init_opt_state
+        aopt = jax.eval_shape(init_fn, aparams)
+        ospecs = sh.opt_specs_for(cfg, mesh, pspecs, aopt)
+        aopt = _shard_abstract(aopt, mesh, ospecs)
+        batch = input_specs(cfg, shape, mesh)
+        if train_impl == "smap":
+            bsp = sh.batch_specs(cfg, shape, mesh)
+            bsp = {k: v for k, v in bsp.items() if k in batch}
+            step = make_train_step_smap(
+                cfg, opt_cfg, mesh, pspecs, bsp,
+                microbatches=microbatches, opt_impl=opt_impl,
+                compress_pod=multi_pod)
+        else:
+            step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                                   opt_impl=opt_impl, gather_specs=gspecs)
+        psh = sh.named(mesh, pspecs)
+        osh = sh.named(mesh, ospecs)
+        jitted = jax.jit(step, out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(aparams, aopt, batch)
+    elif shape.kind == "prefill":
+        batch = input_specs(cfg, shape, mesh)
+        step = make_prefill(cfg, max_len=shape.seq_len, gather_specs=gspecs)
+        with mesh:
+            lowered = jax.jit(step).lower(aparams, batch)
+    else:
+        ins = input_specs(cfg, shape, mesh)
+        step = make_serve_step(cfg, gather_specs=gspecs)
+        args = (aparams, ins["cache"], ins["tokens"], ins["pos"])
+        jitted = jax.jit(step, donate_argnums=(1,))   # cache updated in place
+        with mesh:
+            if "extras" in ins:
+                lowered = jitted.lower(*args, ins["extras"])
+            else:
+                lowered = jitted.lower(*args)
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+    }
+    mem["peak_per_device"] = (mem["argument_bytes"] + mem["output_bytes"]
+                              + mem["temp_bytes"] - mem["alias_bytes"])
+    mem["fits_hbm_16gb"] = bool(mem["peak_per_device"] <= 16e9)
+
+    hlo = compiled.as_text()
+    colls = ha.collective_bytes(hlo, multi_pod=multi_pod)
+    ca = compiled.cost_analysis()
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "tag": tag, "status": "ok",
+        "chips": chips, "fsdp": fsdp, "remat": cfg.remat,
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "collectives": {
+            "per_class_bytes": colls.per_class_bytes,
+            "per_op_bytes": colls.per_op_bytes,
+            "n_ops": colls.n_ops,
+            "total_per_dev": colls.total_bytes,
+            "remote_per_dev": colls.remote_bytes,
+        },
+        "full_step_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "while bodies counted once; see decomposed",
+        },
+    }
+
+    if not skip_analysis:
+        t1 = time.time()
+        dc = an.decomposed_cost(cfg, shape, mesh, fsdp=fsdp)
+        mf = model_flops(cfg, shape)
+        hbm_lb = an.analytic_hbm_bytes(
+            cfg, shape, mesh, fsdp=fsdp,
+            microbatches=8 if shape.kind == "train" else 1)
+        rl = ha.roofline(
+            flops_per_dev=dc["flops_per_dev"],
+            bytes_per_dev=hbm_lb,
+            coll_bytes_per_dev=colls.total_bytes,
+            model_flops_total=mf, chips=chips)
+        rec["decomposed"] = {k: v for k, v in dc.items() if k != "detail"}
+        rec["decomposed"]["detail"] = dc["detail"]
+        rec["roofline"] = rl.to_dict()
+        rec["roofline"]["bytes_per_dev_hlo_upper"] = dc["bytes_per_dev"]
+        rec["roofline"]["memory_s_hlo_upper"] = dc["bytes_per_dev"] / ha.HBM_BW
+        rec["analysis_s"] = round(time.time() - t1, 1)
+
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id (or all)")
+    ap.add_argument("--shape", default=None, help="shape name (or all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-analysis", action="store_true",
+                    help="compile + memory + collectives only")
+    ap.add_argument("--train-impl", default="gspmd",
+                    choices=["gspmd", "smap"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--suffix", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                name += args.suffix
+                path = os.path.join(args.out, name + ".json")
+                try:
+                    # roofline decomposition is a single-pod deliverable;
+                    # multi-pod cells prove compile + sharding + memory
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   skip_analysis=args.skip_analysis or mp,
+                                   train_impl=args.train_impl,
+                                   microbatches=args.microbatches,
+                                   tag=args.train_impl)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": repr(e)}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"mem/dev={rec['memory']['peak_per_device']/1e9:.2f}GB "
+                             f"coll/dev={rec['collectives']['total_per_dev']/1e9:.3f}GB")
+                    if "roofline" in rec:
+                        r = rec["roofline"]
+                        extra += (f" dom={r['dominant']}"
+                                  f" frac={r['roofline_fraction']:.3f}")
+                print(f"[dryrun] {name}: {status}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Decode shapes include the full KV-cache / state pytree for a
+``shape.seq_len``-deep context (ring-buffer-bounded for SWA/hybrid/SSM).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as dec
+from repro.launch import sharding as sh
+
+ENCDEC_SRC_LEN = 4096          # decode-time encoder context (audio frames)
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_tuple(mesh, B: int):
+    """Batch mesh axes, or () when B isn't divisible (replicate batch)."""
+    if mesh is None:
+        return ("data",)
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    shards = 1
+    for a in b:
+        shards *= mesh.shape[a]
+    return b if (B % shards == 0 and B >= shards) else ()
+
+
+def seq_split(cfg: ModelConfig, S: int) -> Tuple[int, int]:
+    """(text_len, vision_len) for VLM; (tgt_len, src_len) for enc-dec."""
+    if cfg.family == "vlm":
+        sv = int(S * cfg.vision_frac)
+        return S - sv, sv
+    if cfg.family == "encdec":
+        return S // 2, S // 2
+    return S, 0
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_tuple(mesh, B)
+    out = {}
+    if cfg.family == "vlm":
+        st, sv = seq_split(cfg, S)
+        out["tokens"] = _sds((B, st), jnp.int32, mesh, P(b, None))
+        out["vision_embeds"] = _sds((B, sv, cfg.d_model), jnp.bfloat16, mesh,
+                                    P(b, None, None))
+        out["position_ids"] = _sds((3, B, S), jnp.int32, mesh, P(None, b, None))
+        out["targets"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+        out["mask"] = _sds((B, S), jnp.float32, mesh, P(b, None))
+    elif cfg.family == "encdec":
+        st, ss = seq_split(cfg, S)
+        out["frame_embeds"] = _sds((B, ss, cfg.d_model), jnp.bfloat16, mesh,
+                                   P(b, None, None))
+        out["tokens"] = _sds((B, st), jnp.int32, mesh, P(b, None))
+        out["targets"] = _sds((B, st), jnp.int32, mesh, P(b, None))
+        out["mask"] = _sds((B, st), jnp.float32, mesh, P(b, None))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+        out["targets"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+        out["mask"] = _sds((B, S), jnp.float32, mesh, P(b, None))
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> Dict:
+    t = train_inputs(cfg, shape, mesh)
+    t.pop("targets", None)
+    t.pop("mask", None)
+    return t
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> Dict:
+    """(cache, tokens, pos[, extras]) stand-ins for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_tuple(mesh, B)
+    src = ENCDEC_SRC_LEN if cfg.family == "encdec" else 0
+    cache = dec.abstract_cache(cfg, B, S, src_len=src)
+    if mesh is not None:
+        specs = sh.cache_specs(cfg, mesh, cache)
+        cache = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            cache, specs)
+    out = {
+        "cache": cache,
+        "tokens": _sds((B, 1), jnp.int32, mesh, P(b, None)),
+        "pos": _sds((B,), jnp.int32, mesh, P(b)),
+    }
+    if cfg.rope_type == "mrope":
+        out["extras"] = {"position_ids": _sds((3, B, 1), jnp.int32, mesh,
+                                              P(None, b, None))}
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> Dict:
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, mesh)
+    return decode_inputs(cfg, shape, mesh)

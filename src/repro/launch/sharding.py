@@ -1,0 +1,237 @@
+"""Sharding rules: logical parameter axes -> mesh PartitionSpecs.
+
+Default mapping (the "megatron" discipline):
+  vocab/heads/kv_heads/ff/lru/ssd_* -> "model"   (when divisible)
+  embed (d_model)                   -> None, or "data"-sharded under FSDP
+  expert                            -> None (TP runs inside each expert)
+  batch dims                        -> ("pod","data")
+
+FSDP (weight sharding over the data axis with per-layer all-gather) turns on
+automatically when the training-state bytes per chip would exceed the HBM
+budget — grok-1-314B needs it on 256 chips; see ``needs_fsdp``.
+
+Non-divisible dims are replicated (llama3.2's 24 heads and qwen2's 12 heads
+against a model axis of 16) — recorded per-cell in the roofline notes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.params import logical_axes, model_def, param_bytes, n_params
+
+
+HBM_PER_CHIP = 16e9
+TRAIN_BYTES_PER_PARAM = 12.0   # bf16 p + bf16 g + f32 m + f32 v
+
+
+def needs_fsdp(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+               model_size: int) -> bool:
+    if shape.kind != "train":
+        # serving: params only; spread over model axis must fit
+        return (param_bytes(cfg) / model_size) > 0.6 * HBM_PER_CHIP
+    per_chip = n_params(cfg) * TRAIN_BYTES_PER_PARAM / n_chips
+    return per_chip > 0.35 * HBM_PER_CHIP
+
+
+def axis_rules(cfg: ModelConfig, mesh, *, fsdp: bool) -> Dict[str, Optional[str]]:
+    msize = mesh.shape["model"]
+    dname = "data"
+
+    def fits(dim: int) -> Optional[str]:
+        return "model" if dim % msize == 0 and dim >= msize else None
+
+    def fits_heads(hq: int, hkv: int) -> Optional[str]:
+        if not hq:
+            return None
+        if hq % msize == 0:
+            return "model"
+        if cfg.head_pad_to:
+            # compute-time group padding makes the activation shardable,
+            # but the PARAM stays at hq heads -> keep params replicated
+            return None
+        return None
+
+    return {
+        "vocab": "model",                       # GSPMD pads uneven vocab
+        "embed": dname if fsdp else None,
+        "heads": fits_heads(cfg.n_heads or 0, cfg.n_kv_heads or 0),
+        "kv_heads": fits(cfg.n_kv_heads or 0),
+        "ff": fits(cfg.d_ff or 0),
+        "expert": None,
+        "lru": fits(cfg.lru_width or 0),
+        "ssd_inner": fits(cfg.d_inner if cfg.ssm_state else 0),
+        "ssd_bc": fits(cfg.ssm_groups * cfg.ssm_state if cfg.ssm_state else 0),
+        "ssd_heads": fits(cfg.ssm_heads if cfg.ssm_state else 0),
+        "layer": None,
+        None: None,
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh, *, fsdp: bool = False):
+    """Pytree of PartitionSpecs matching ``model_def`` params."""
+    rules = axis_rules(cfg, mesh, fsdp=fsdp)
+    axes = logical_axes(cfg)
+
+    def to_spec(ax_tuple):
+        spec = []
+        used = set()
+        for ax in ax_tuple:
+            m = rules.get(ax)
+            if m is None or m in used:
+                spec.append(None)
+            else:
+                spec.append(m)
+                used.add(m)
+        return P(*spec)
+
+    specs = jax.tree.map(to_spec, axes,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    if not cfg.tie_embeddings:
+        # Untied table: shard d_model, not vocab, so the token gather stays
+        # local (a vocab-sharded table forces a full-table all-gather).
+        # Under FSDP the vocab dim absorbs the data axis.
+        specs["embed"] = P("data" if fsdp else None, "model")
+    return specs
+
+
+def opt_specs(cfg: ModelConfig, mesh, pspecs, *, zero: bool = True):
+    """ZeRO-1: moments take the param spec + 'data' on the first replicated
+    divisible dim.  ``count`` stays replicated."""
+    defs = model_def(cfg)
+    dsize = mesh.shape["data"]
+
+    def zspec(spec, pdef):
+        if not zero:
+            return spec
+        parts = list(spec) + [None] * (len(pdef.shape) - len(spec))
+        if "data" in parts:        # already data-sharded (FSDP params)
+            return P(*parts)
+        for i, (ax, dim) in enumerate(zip(parts, pdef.shape)):
+            if ax is None and dim % dsize == 0 and dim >= dsize:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    from repro.models.params import ParamDef
+    mv = jax.tree.map(zspec, pspecs, defs,
+                      is_leaf=lambda x: isinstance(x, (P, ParamDef)))
+    return {"m": mv, "v": mv, "count": P()}
+
+
+def gather_specs(cfg: ModelConfig, mesh):
+    """Per-layer compute-time weight specs (FSDP gather targets).
+
+    Under FSDP, weights at rest are sharded over ("data", "model"); inside
+    the layer scan each layer's weights must be explicitly constrained back
+    to their model-only specs, otherwise GSPMD contracts over the data axis
+    and replicates the *batch* instead (observed on grok-1).  Returns a
+    pytree shaped like the scanned param subtrees with the leading 'layer'
+    axis stripped.
+    """
+    full = param_specs(cfg, mesh, fsdp=False)
+
+    def strip(spec):
+        return P(*spec[1:]) if len(spec) else spec
+
+    out = {}
+    for key in ("layers", "groups", "enc_layers", "dec_layers"):
+        if key in full:
+            out[key] = jax.tree.map(strip, full[key],
+                                    is_leaf=lambda x: isinstance(x, P))
+    if "tail" in full:
+        out["tail"] = full["tail"]
+    return out
+
+
+def opt_specs_for(cfg: ModelConfig, mesh, pspecs, aopt, *, zero: bool = True):
+    """Specs matching an abstract opt-state pytree (f32 or 8-bit moments).
+
+    8-bit moments are {"q": int8 like param, "scale": f32 (..., 1)}: q takes
+    the ZeRO'd param spec; scale takes the same spec with the last dim
+    replicated."""
+    base = opt_specs(cfg, mesh, pspecs, zero=zero)
+
+    def is8(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    sample = jax.tree.leaves(aopt["m"], is_leaf=is8)
+    if not sample or not is8(sample[0]):
+        return base
+
+    def expand(spec):
+        parts = list(spec)
+        return {"q": spec, "scale": P(*parts[:-1], None) if parts else P()}
+
+    mv = jax.tree.map(expand, base["m"], is_leaf=lambda x: isinstance(x, P))
+    return {"m": mv, "v": mv, "count": P()}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """PartitionSpecs for the input batch pytree."""
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bp = P(b)
+    specs = {"tokens": P(b, None), "targets": P(b, None), "mask": P(b, None)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(b, None, None)
+        specs["position_ids"] = P(None, b, None)
+    if cfg.family == "encdec":
+        specs["frame_embeds"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, mesh, cache_tree):
+    """Decode cache: batch over ("pod","data"); the long axis over "model".
+
+    Attention KV rings shard their window axis over "model" (decode-time
+    context parallelism: scores stay sharded, softmax reduces with a tiny
+    all-reduce).  Recurrent/SSM states shard channels/heads over "model".
+    """
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = mesh.shape["model"]
+
+    bshards = 1
+    for a in b:
+        bshards *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        # rank-agnostic (leading layer dims optional):
+        #   (..., B, W, Hkv, dh) attn/cross; (..., B, K-1, C) conv;
+        #   (..., B, H, P, N) ssm; (..., B, W_lru) lru h state
+        nd = leaf.ndim
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        parts = [None] * nd
+
+        def set_model(idx, dim):
+            if dim % msize == 0 and dim >= msize:
+                parts[idx] = "model"
+
+        if name in ("k", "v") or name.startswith("cross_"):
+            bi = nd - 4
+            set_model(nd - 3, leaf.shape[nd - 3])       # window axis
+        elif name == "h":
+            bi = nd - 2
+            set_model(nd - 1, leaf.shape[nd - 1])       # lru width
+        elif name == "ssm":
+            bi = nd - 4
+            set_model(nd - 3, leaf.shape[nd - 3])       # heads
+        elif name.startswith("conv"):
+            bi = nd - 3
+            set_model(nd - 1, leaf.shape[nd - 1])       # channels
+        else:
+            return P(*parts)
+        if leaf.shape[bi] % bshards == 0 and leaf.shape[bi] >= bshards:
+            parts[bi] = b
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+"""Model substrate: pure-JAX layer definitions for all assigned families."""

@@ -1,0 +1,294 @@
+"""Autoregressive serving path: cache init, prefill, single-token decode.
+
+Caches use ring buffers of width W = min(max_len, attention window), so
+sliding-window / recurrent / SSM architectures serve 500k+ contexts with a
+bounded working set — the property that makes their ``long_500k`` cells
+runnable (and the ARCAS "compact" policy attractive for them).
+
+Cache pytrees mirror the parameter stacking so layer loops are
+``lax.scan``s over (stacked params, stacked cache).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.params import hybrid_structure
+from repro.models.transformer import (
+    _attn_out, _ffn, cdt, embed_tokens, forward, head_logits, _rope_for)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _attn_cache_width(cfg: ModelConfig, max_len: int, layer_type="attn",
+                      hybrid=False) -> int:
+    w = cfg.local_window if hybrid else cfg.window
+    return min(max_len, w) if w else max_len
+
+
+def _attn_cache(cfg: ModelConfig, B: int, W: int):
+    dtype = cdt(cfg)
+    shape = (B, W, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _layer_cache(cfg: ModelConfig, lt: str, B: int, max_len: int,
+                 hybrid=False):
+    if lt == "attn":
+        return _attn_cache(cfg, B, _attn_cache_width(cfg, max_len, hybrid=hybrid))
+    if lt == "rec":
+        return rglru_mod.rglru_init_state(cfg, B, cdt(cfg))
+    if lt == "ssd":
+        return ssd_mod.ssd_init_state(cfg, B, cdt(cfg))
+    raise ValueError(lt)
+
+
+def _stack_cache(c, n):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               src_len: int = 0) -> Dict:
+    """Zero cache for ``batch`` streams with context capacity ``max_len``."""
+    if cfg.family == "encdec":
+        self_c = _stack_cache(_attn_cache(cfg, batch, max_len), cfg.dec_layers)
+        dt = cdt(cfg)
+        cshape = (cfg.dec_layers, batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"self": self_c,
+                "cross_k": jnp.zeros(cshape, dt),
+                "cross_v": jnp.zeros(cshape, dt)}
+    if cfg.block_pattern:
+        pattern, n_groups, tail = hybrid_structure(cfg)
+        group = {f"b{i}_{t}": _layer_cache(cfg, t, batch, max_len, hybrid=True)
+                 for i, t in enumerate(pattern)}
+        return {"groups": _stack_cache(group, n_groups),
+                "tail": {f"t{i}_{t}": _layer_cache(cfg, t, batch, max_len,
+                                                   hybrid=True)
+                         for i, t in enumerate(tail)}}
+    lt = cfg.layer_types()[0]
+    return {"layers": _stack_cache(_layer_cache(cfg, lt, batch, max_len),
+                                   cfg.n_layers)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   src_len: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, src_len))
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode layers
+# ---------------------------------------------------------------------------
+
+def _decode_attn_layer(x, lp, lc, cfg: ModelConfig, rope1, pos, *, window):
+    xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if rope1 is not None:
+        cos, sin = rope1
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    kc, vc = L.cache_update(lc["k"], lc["v"], k, v, pos)
+    W = kc.shape[1]
+    kv_pos = L.cache_positions(pos, W)
+    o = L.decode_attention(q, kc, vc, kv_pos, pos, window=window)
+    h = x + _attn_out(o, lp["attn"], x.dtype)
+    f, _ = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                dropless=True)
+    return h + f, {"k": kc, "v": vc}
+
+
+def _decode_layer(x, lp, lc, cfg: ModelConfig, lt: str, rope1, pos, *,
+                  hybrid=False):
+    if lt == "attn":
+        w = cfg.local_window if hybrid else cfg.window
+        return _decode_attn_layer(x, lp, lc, cfg, rope1, pos, window=w)
+    if lt == "rec":
+        r, st = rglru_mod.rglru_decode_step(
+            L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["rec"], cfg, lc)
+        h = x + r
+        f, _ = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                    dropless=True)
+        return h + f, st
+    if lt == "ssd":
+        s, st = ssd_mod.ssd_decode_step(
+            L.rms_norm(x, lp["ln"], cfg.norm_eps), lp["ssd"], cfg, lc)
+        return x + s, st
+    raise ValueError(lt)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, extras=None,
+                gather_specs=None):
+    """One token for every stream.  tokens: (B,1); pos: (B,) absolute.
+
+    Returns (logits (B, V) f32, new cache).
+    """
+    from repro.models.transformer import _wsc_tree
+    extras = extras or {}
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.rope_type == "mrope":
+        pid = extras.get("position_ids",
+                         jnp.broadcast_to(pos[None, :, None], (3,) + tokens.shape))
+        rope1 = L.mrope_tables(pid, cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+    elif cfg.rope_type == "none":
+        rope1 = None
+    else:
+        rope1 = L.rope_tables(pos[:, None], cfg.head_dim, cfg.rope_theta)
+
+    if cfg.family == "encdec":
+        def body(x, inp):
+            lp, lc = inp
+            lp = _wsc_tree(lp, gather_specs and gather_specs.get("dec_layers"))
+            # 1. self-attention (ln1) with ring cache
+            xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wq"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            k = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wk"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            v = jnp.einsum("bsd,dhk->bshk", xin, lp["attn"]["wv"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            if rope1 is not None:
+                cos, sin = rope1
+                q = L.apply_rope(q, cos, sin)
+                k = L.apply_rope(k, cos, sin)
+            kc, vc = L.cache_update(lc["self_c"]["k"], lc["self_c"]["v"],
+                                    k, v, pos)
+            W = kc.shape[1]
+            kv_pos = L.cache_positions(pos, W)
+            o = L.decode_attention(q, kc, vc, kv_pos, pos)
+            h = x + _attn_out(o, lp["attn"], x.dtype)
+            # 2. cross-attention (ln2) over static encoder KV
+            xin = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            cq = jnp.einsum("bsd,dhk->bshk", xin, lp["cross"]["wq"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+            S_src = lc["ck"].shape[1]
+            src_pos = jnp.broadcast_to(jnp.arange(S_src)[None],
+                                       (x.shape[0], S_src))
+            co = L.decode_attention(cq, lc["ck"], lc["cv"], src_pos,
+                                    jnp.full((x.shape[0],), 2**30, jnp.int32))
+            h = h + _attn_out(co, lp["cross"], x.dtype)
+            # 3. FFN (ln3)
+            f, _ = _ffn(L.rms_norm(h, lp["ln3"], cfg.norm_eps), lp, cfg,
+                        dropless=True)
+            return h + f, {"k": kc, "v": vc}
+
+        xs = (params["dec_layers"],
+              {"self_c": cache["self"], "ck": cache["cross_k"],
+               "cv": cache["cross_v"]})
+        x, new_self = lax.scan(body, x, xs)
+        new_cache = dict(cache, self=new_self)
+    elif cfg.block_pattern:
+        pattern, n_groups, tail = hybrid_structure(cfg)
+
+        def gbody(x, inp):
+            gp, gc = inp
+            gp = _wsc_tree(gp, gather_specs and gather_specs.get("groups"))
+            new_gc = {}
+            for i, t in enumerate(pattern):
+                nm = f"b{i}_{t}"
+                x, st = _decode_layer(x, gp[nm], gc[nm], cfg, t, rope1, pos,
+                                      hybrid=True)
+                new_gc[nm] = st
+            return x, new_gc
+
+        x, new_groups = lax.scan(gbody, x, (params["groups"], cache["groups"]))
+        new_tail = {}
+        for nm, lp in params["tail"].items():
+            t = nm.split("_", 1)[1]
+            x, st = _decode_layer(x, lp, cache["tail"][nm], cfg, t, rope1, pos,
+                                  hybrid=True)
+            new_tail[nm] = st
+        new_cache = {"groups": new_groups, "tail": new_tail}
+    else:
+        lt = cfg.layer_types()[0]
+
+        def body(x, inp):
+            lp, lc = inp
+            lp = _wsc_tree(lp, gather_specs and gather_specs.get("layers"))
+            x, st = _decode_layer(x, lp, lc, cfg, lt, rope1, pos)
+            return x, st
+
+        x, new_layers = lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = head_logits(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also materializes the decode cache
+# ---------------------------------------------------------------------------
+
+def _ring_arrange(kv, W):
+    """kv: (B, S, H, dh) full-seq keys/values -> ring cache (B, W, H, dh)."""
+    S = kv.shape[1]
+    if S <= W:
+        pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+        return jnp.pad(kv, pad)
+    last = kv[:, -W:]
+    return jnp.roll(last, shift=(S - W) % W, axis=1)
+
+
+def _state_to_cache(cfg, st, lt, max_len, hybrid=False):
+    if lt in ("attn", "enc"):
+        W = _attn_cache_width(cfg, max_len, hybrid=hybrid)
+        return {"k": _ring_arrange(st["k"], W), "v": _ring_arrange(st["v"], W)}
+    return st  # rec/ssd states already in decode form
+
+
+def prefill(params, cfg: ModelConfig, tokens, extras=None, *, max_len: int,
+            gather_specs=None):
+    """Process the prompt; return (last-token logits (B,V), cache).
+
+    Ring-arranging happens INSIDE the layer scan (state_fn), so a
+    sliding-window cache never stacks (L, B, S_full, ...) — only
+    (L, B, W, ...)."""
+    extras = extras or {}
+    if cfg.family == "encdec":
+        return encdec_prefill(params, cfg, extras["frame_embeds"], tokens,
+                              max_len=max_len)
+    hybrid = bool(cfg.block_pattern)
+
+    def sfn(s, t):
+        return _state_to_cache(cfg, s, t, max_len, hybrid=hybrid)
+
+    x, states, _ = forward(params, cfg, tokens, extras, return_states=True,
+                           state_fn=sfn, gather_specs=gather_specs)
+    if cfg.block_pattern:
+        cache = {"groups": states["groups"], "tail": states["tail"]}
+    else:
+        cache = {"layers": states["layers"]}
+    logits = head_logits(params, cfg, x[:, -1])
+    return logits, cache
+
+
+def encdec_prefill(params, cfg: ModelConfig, frame_embeds, tokens, *,
+                   max_len: int):
+    """Encode source; prefill decoder on target prefix; build caches."""
+    from repro.models.transformer import decoder_forward, encode
+
+    enc_out = encode(params, cfg, frame_embeds)
+    x, states = decoder_forward(params, cfg, tokens, enc_out,
+                                return_states=True)
+    self_c = jax.vmap(lambda s: {
+        "k": _ring_arrange(s["k"], max_len),
+        "v": _ring_arrange(s["v"], max_len)})(
+            {"k": states["k"], "v": states["v"]})
+    logits = head_logits(params, cfg, x[:, -1])
+    cache = {"self": self_c, "cross_k": states["ck"], "cross_v": states["cv"]}
+    return logits, cache

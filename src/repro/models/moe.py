@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer, TPU-native.
+
+The paper's lesson (adapted): keep dispatch as dense, MXU-friendly einsums
+rather than a GPU-style scatter/sort.  Tokens are processed in fixed-size
+blocks (``cfg.moe_block``) so the one-hot dispatch tensors stay small and the
+working set per step is bounded (the ARCAS "LocalCache" discipline applied to
+VMEM/HBM).
+
+params:
+  router: (D, E)
+  wi:     (E, D, 2, F) for GLU activations, else (E, D, F)
+  wo:     (E, F, D)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _expert_ffn(xin, params, activation: str):
+    """xin: (B, E, C, D) -> (B, E, C, D) (weights broadcast over batch)."""
+    if activation in ("swiglu", "gelu_glu", "relu_glu"):
+        h = jnp.einsum("becd,edtf->bectf", xin, params["wi"],
+                       preferred_element_type=jnp.float32)
+        gate, up = h[..., 0, :], h[..., 1, :]
+        if activation == "swiglu":
+            act = jax.nn.silu(gate)
+        elif activation == "gelu_glu":
+            act = jax.nn.gelu(gate, approximate=True)
+        else:
+            act = jax.nn.relu(gate)
+        h = (act * up).astype(xin.dtype)
+    else:
+        h = jnp.einsum("becd,edf->becf", xin, params["wi"],
+                       preferred_element_type=jnp.float32)
+        if activation == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+        h = h.astype(xin.dtype)
+    return jnp.einsum("becf,efd->becd", h, params["wo"]).astype(xin.dtype)
+
+
+def moe_block_apply(xblk, params, *, n_experts: int, top_k: int,
+                    capacity_factor: float, activation: str,
+                    dropless: bool = False):
+    """One token block, batched form.  xblk: (B, T, D) -> (B, T, D), aux.
+
+    Routing/dispatch/combine keep the BATCH dimension: every einsum either
+    contracts an unsharded dim (t, d) or batches over b, so under MANUAL
+    data parallelism (shard_map) the whole dispatch is shard-local.  Under
+    plain GSPMD this form makes the per-block expert weight-gradient psum
+    explicit (worse); use the flattened form there (cfg.moe_batched=False).
+
+    ``dropless=True`` sets capacity = T (serving semantics: no token drops,
+    at the cost of reading every expert — the right trade at decode batch
+    sizes, where expert weights dominate HBM traffic anyway).
+    """
+    B, T, D = xblk.shape
+    E, K = n_experts, top_k
+    C = T if dropless else int(max(1, (T * K * capacity_factor) // E))
+    C = min(C, T)
+
+    logits = jnp.einsum("btd,de->bte", xblk, params["router"],
+                        preferred_element_type=jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)            # (B, T, E) f32
+    top_vals, top_idx = lax.top_k(logits, K)               # (B, T, K)
+    top_gates = jax.nn.softmax(top_vals, axis=-1)          # renormalized over K
+
+    # position of each (token, k) claim within its expert's capacity
+    sel = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)    # (B, T, K, E)
+    flat = sel.reshape(B, T * K, E)                        # claims in (t, k) order
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (B, T*K, E)
+    pos = jnp.einsum("bxe,bxe->bx", pos, flat).reshape(B, T, K)
+    keep = (pos < C).astype(jnp.float32)
+
+    # combine[b, t, e, c] = gate weight of token t at expert e, slot c
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    combine = jnp.einsum("btk,btke,btkc->btec",
+                         top_gates * keep, sel, slot_oh)   # (B, T, E, C)
+    dispatch = (combine > 0).astype(xblk.dtype)
+
+    # bf16 dispatch: entries are one-hot selections, exact in bf16; the
+    # flattened form's cross-shard psum of xin then carries half the bytes
+    xin = jnp.einsum("btec,btd->becd", dispatch, xblk).astype(xblk.dtype)
+    y = _expert_ffn(xin, params, activation)
+    out = jnp.einsum("btec,becd->btd", combine.astype(xblk.dtype), y,
+                     preferred_element_type=jnp.float32).astype(xblk.dtype)
+
+    # Switch-style load-balance auxiliary loss terms
+    me = gates_all.mean(axis=(0, 1))                       # (E,)
+    ce = sel.sum(axis=2).mean(axis=(0, 1))                 # fraction routed
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "dropped": 1.0 - keep.mean()}
+    return out, aux
+
+
+def moe_block_apply_flat(xblk, params, *, n_experts: int, top_k: int,
+                         capacity_factor: float, activation: str,
+                         dropless: bool = False):
+    """Flattened-token form: xblk (B, T, D) -> routing over B*T jointly.
+
+    GSPMD default: the expert weight gradients are computed redundantly per
+    shard (no explicit per-block psum), which the partitioner handles far
+    better than the batched form's per-block (E,C,D) reductions.
+    """
+    B, T, D = xblk.shape
+    y, aux = moe_block_apply(
+        xblk.reshape(1, B * T, D), params, n_experts=n_experts, top_k=top_k,
+        capacity_factor=capacity_factor, activation=activation,
+        dropless=dropless)
+    return y.reshape(B, T, D), aux
+
+
+def moe_apply(x, params, cfg, *, unroll=False, dropless=False):
+    """x: (B, S, D) -> (B, S, D).  Scans blocks of ~cfg.moe_block tokens.
+
+    Blocks are cut along the SEQUENCE axis (seq-block x full batch), never
+    along the batch axis: the scan slices its xs dim 0, and slicing a
+    data-sharded dimension forces GSPMD into involuntary replication of the
+    whole token stream (observed on grok-1: 13 GB/device).  The sequence
+    axis is unsharded, so scanning seq blocks keeps tokens batch-sharded.
+    """
+    B, S, D = x.shape
+    blk_s = max(1, min(max(1, cfg.moe_block // B), S))
+    S_pad = ((S + blk_s - 1) // blk_s) * blk_s
+    if S_pad != S:  # pad sequence; padded outputs discarded
+        x = jnp.pad(x, ((0, 0), (0, S_pad - S), (0, 0)))
+    nb = S_pad // blk_s
+    # (B, nb, blk_s, D) -> (nb, B, blk_s, D): scan over UNSHARDED seq blocks
+    xt = x.reshape(B, nb, blk_s, D).transpose(1, 0, 2, 3)
+
+    # nested remat: without it, vjp-of-scan stores every block's dispatch/
+    # combine tensors (f32, stacked over blocks) before the backward sweep
+    apply = moe_block_apply if cfg.moe_batched else moe_block_apply_flat
+
+    @jax.checkpoint
+    def block_fn(xb, params):
+        y, aux = apply(
+            xb, params, n_experts=cfg.n_experts,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            activation=cfg.activation, dropless=dropless)
+        return y, aux
+
+    def body(_, xb):
+        y, aux = block_fn(xb, params)
+        return None, (y, aux["lb_loss"], aux["dropped"])
+
+    if unroll or nb == 1:
+        ys, lbs, drops = [], [], []
+        for i in range(nb):
+            _, (y, lb, dr) = body(None, xt[i])
+            ys.append(y); lbs.append(lb); drops.append(dr)
+        y = jnp.stack(ys)
+        lb = jnp.stack(lbs).mean()
+        dropped = jnp.stack(drops).mean()
+    else:
+        _, (y, lb, dropped) = lax.scan(body, None, xt)
+        lb, dropped = lb.mean(), dropped.mean()
+    y = y.transpose(1, 0, 2, 3).reshape(B, S_pad, D)[:, :S]
+    return y, {"lb_loss": lb, "dropped": dropped}

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t @ W_a)            # recurrence gate
+    i_t = sigmoid(x_t @ W_x)            # input gate
+    log_a_t = -c * softplus(Lambda) * r_t
+    h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2*log_a_t)) * (i_t * x_t)
+
+Train/prefill uses an associative scan (log-depth; the Pallas kernel in
+``repro/kernels/rglru_scan`` implements the chunked sequential-parallel
+version for TPU).  Decode is a single fused step.
+
+params (per recurrent layer):
+  w_gate:  (D, W)          # gelu branch
+  w_in:    (D, W)          # recurrence branch in-projection
+  conv_w:  (K, W), conv_b: (W,)
+  w_a:     (W, W), w_x: (W, W)
+  lam:     (W,)            # Lambda (softplus-parameterized decay)
+  w_out:   (W, D)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import causal_conv1d, conv1d_step
+
+RG_LRU_C = 8.0
+
+
+def _gates(u, params):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u.astype(jnp.float32),
+                                  params["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u.astype(jnp.float32),
+                                  params["w_x"].astype(jnp.float32)))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    return log_a, i
+
+
+def rglru_scan_ref(u, log_a, i_gate):
+    """Associative scan over time.  u: (B,S,W) f32; returns h (B,S,W) f32."""
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0))
+    b = beta * (i_gate * u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_init_state(cfg, batch, dtype=jnp.float32):
+    W, K = cfg.lru_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, W), dtype)}
+
+
+def rglru_block_apply(x, params, cfg, *, unroll=False):
+    """Full recurrent block.  x: (B,S,D) -> (B,S,D), state for decode."""
+    K = cfg.conv_width
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate"],
+                   preferred_element_type=jnp.float32), approximate=True)
+    u_raw = jnp.einsum("bsd,dw->bsw", x, params["w_in"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    u = causal_conv1d(u_raw, params["conv_w"], params["conv_b"])
+    log_a, i_gate = _gates(u, params)
+    if cfg.use_pallas:
+        from repro.kernels.rglru_scan.ops import lru
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0))
+        b = beta * (i_gate * u.astype(jnp.float32))
+        h = lru(a, b)
+    else:
+        h = rglru_scan_ref(u.astype(jnp.float32), log_a, i_gate)
+    out = (h * gate).astype(x.dtype)
+    state = {"h": h[:, -1, :],
+             "conv": u_raw[:, -(K - 1):, :].astype(x.dtype)}
+    y = jnp.einsum("bsw,wd->bsd", out, params["w_out"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, state
+
+
+def rglru_decode_step(x_t, params, cfg, state):
+    """x_t: (B,1,D); state: {"h": (B,W) f32, "conv": (B,K-1,W)}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bd,dw->bw", x_t[:, 0], params["w_gate"],
+                   preferred_element_type=jnp.float32), approximate=True)
+    u = jnp.einsum("bd,dw->bw", x_t[:, 0], params["w_in"],
+                   preferred_element_type=jnp.float32).astype(x_t.dtype)
+    u, conv_state = conv1d_step(u, state["conv"], params["conv_w"],
+                                params["conv_b"])
+    log_a, i_gate = _gates(u, params)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0))
+    h = a * state["h"] + beta * (i_gate * u.astype(jnp.float32))
+    out = (h * gate).astype(x_t.dtype)
+    y = jnp.einsum("bw,wd->bd", out, params["w_out"],
+                   preferred_element_type=jnp.float32).astype(x_t.dtype)
+    return y[:, None, :], {"h": h, "conv": conv_state}

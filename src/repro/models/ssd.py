@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) block.
+
+TPU adaptation: the SSD *chunked* form recasts the selective-scan recurrence
+as dense per-chunk matmuls (MXU-friendly) plus a cheap inter-chunk scan —
+exactly the "compact compute, bounded state" structure ARCAS favors.  The
+naive per-timestep recurrence lives in ``repro/kernels/ssd_scan/ref.py`` as
+the oracle; this module implements the chunked jnp algorithm used by the
+models, and the Pallas kernel mirrors the same blocking on TPU.
+
+Projections are kept as separate matrices (not one packed in_proj) so each
+can carry its own PartitionSpec without shard-boundary misalignment.
+
+params (per layer):
+  wz, wx: (D, di)     wB, wC: (D, G*N)     wdt: (D, H)
+  conv_x: (K, di) + bx,  conv_B/conv_C: (K, G*N) + bB/bC
+  A_log: (H,)   dt_bias: (H,)   D_skip: (H,)
+  norm: (di,)   out_proj: (di, D)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import causal_conv1d, conv1d_step, rms_norm
+
+
+def segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] (i>=j)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, *, chunk: int, unroll: bool = False):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,); B_/C_: (B,S,G,N).
+
+    Returns y: (B,S,H,P) and final state (B,H,P,N).  Math in f32.
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)   # (B,S,H,N)
+    Cf = jnp.repeat(C_.astype(jnp.float32), rep, axis=2)
+
+    a = dtf * A.astype(jnp.float32)[None, None, :]          # (B,S,H) log-decay
+    xdt = xf * dtf[..., None]                               # dt-weighted input
+
+    def r(t):  # (B,S,...) -> (B,nc,chunk,...)
+        return t.reshape((Bb, nc, chunk) + t.shape[2:])
+
+    xc, ac, Bc, Cc = r(xdt), r(a), r(Bf), r(Cf)
+
+    # --- intra-chunk (dense, MXU) ---
+    L = jnp.exp(segsum(ac.transpose(0, 1, 3, 2)))           # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)       # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, xc)
+
+    # --- per-chunk end states ---
+    a_cum = jnp.cumsum(ac, axis=2)                          # (B,nc,Q,H) inclusive
+    a_tot = a_cum[:, :, -1, :]                              # (B,nc,H)
+    decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)    # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xc)
+
+    # --- inter-chunk recurrence (tiny scan over nc) ---
+    def step(h, inp):
+        s_c, atot = inp
+        h_new = h * jnp.exp(atot)[..., None, None] + s_c
+        return h_new, h                                     # emit state *before* chunk
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    if unroll:
+        hs, h = [], h0
+        for c in range(nc):
+            h, prev = step(h, (S_c[:, c], a_tot[:, c]))
+            hs.append(prev)
+        h_prev = jnp.stack(hs, axis=1)
+        h_final = h
+    else:
+        h_final, h_prev = lax.scan(
+            step, h0, (S_c.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+        h_prev = h_prev.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    # --- inter-chunk output ---
+    decay_from_start = jnp.exp(a_cum)                       # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Cc, decay_from_start, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def _proj_conv(x, w, conv_w, conv_b, K):
+    """Returns (activated conv output, pre-conv tail for decode state)."""
+    h = jnp.einsum("bsd,dk->bsk", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    tail = h[:, -(K - 1):, :]
+    h = causal_conv1d(h, conv_w, conv_b)
+    return jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype), tail
+
+
+def ssd_block_apply(x, params, cfg, *, unroll=False):
+    """Full Mamba2 block (train/prefill).  x: (B, S, D) -> (B, S, D)."""
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Bb, S, _ = x.shape
+    K = cfg.conv_width
+    z = jnp.einsum("bsd,dk->bsk", x, params["wz"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xs, tail_x = _proj_conv(x, params["wx"], params["conv_x"], params["bx"], K)
+    B_, tail_B = _proj_conv(x, params["wB"], params["conv_B"], params["bB"], K)
+    C_, tail_C = _proj_conv(x, params["wC"], params["conv_C"], params["bC"], K)
+    dtr = jnp.einsum("bsd,dh->bsh", x, params["wdt"],
+                     preferred_element_type=jnp.float32)
+    xs = xs.reshape(Bb, S, H, P)
+    B_ = B_.reshape(Bb, S, G, N)
+    C_ = C_.reshape(Bb, S, G, N)
+    dtv = jax.nn.softplus(dtr + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    chunk = min(cfg.ssd_chunk, S)
+    pad = (-S) % chunk
+    if pad:  # front-pad: zero inputs add nothing to the state (exact)
+        xs = jnp.pad(xs, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (pad, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan.ops import ssd_with_state
+        y, state = ssd_with_state(xs, dtv, A, B_, C_, chunk=chunk)
+        y = y.astype(x.dtype)
+    else:
+        y, state = ssd_chunked(xs, dtv, A, B_, C_, chunk=chunk, unroll=unroll)
+    if pad:
+        y = y[:, pad:]
+        xs = xs[:, pad:]
+    y = y + xs * params["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bb, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    full_state = {"ssm": state, "conv_x": tail_x, "conv_B": tail_B,
+                  "conv_C": tail_C}
+    return out, full_state
+
+
+def ssd_init_state(cfg, batch, dtype=jnp.float32):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, G * N), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, G * N), dtype),
+    }
+
+
+def ssd_decode_step(x_t, params, cfg, state):
+    """One decode step.  x_t: (B, 1, D); state from ``ssd_init_state``."""
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Bb = x_t.shape[0]
+    xt = x_t[:, 0]
+    z = jnp.einsum("bd,dk->bk", xt, params["wz"],
+                   preferred_element_type=jnp.float32).astype(x_t.dtype)
+
+    def piece(w, conv_w, conv_b, st):
+        h = jnp.einsum("bd,dk->bk", xt, w,
+                       preferred_element_type=jnp.float32).astype(x_t.dtype)
+        h, new_st = conv1d_step(h, st, conv_w, conv_b)
+        return jax.nn.silu(h.astype(jnp.float32)).astype(x_t.dtype), new_st
+
+    xs, cx = piece(params["wx"], params["conv_x"], params["bx"], state["conv_x"])
+    B_, cb = piece(params["wB"], params["conv_B"], params["bB"], state["conv_B"])
+    C_, cc = piece(params["wC"], params["conv_C"], params["bC"], state["conv_C"])
+    dtr = jnp.einsum("bd,dh->bh", xt, params["wdt"],
+                     preferred_element_type=jnp.float32)
+    dtv = jax.nn.softplus(dtr + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xs = xs.reshape(Bb, H, P)
+    B_ = jnp.repeat(B_.reshape(Bb, G, N), H // G, axis=1)
+    C_ = jnp.repeat(C_.reshape(Bb, G, N), H // G, axis=1)
+    decay = jnp.exp(dtv * A[None, :])                                   # (B,H)
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", B_.astype(jnp.float32), xs.astype(jnp.float32), dtv)
+    y = jnp.einsum("bhn,bhpn->bhp", C_.astype(jnp.float32), ssm)
+    y = y + xs.astype(jnp.float32) * params["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bb, di).astype(x_t.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x_t.dtype)
+    return out[:, None, :], {"ssm": ssm, "conv_x": cx, "conv_B": cb, "conv_C": cc}

@@ -1,0 +1,472 @@
+"""Model forward / loss / prefill / decode for every assigned family.
+
+Layer stacks run under ``jax.lax.scan`` with stacked parameters (small HLO,
+fast SPMD compiles).  Hybrid (RecurrentGemma) models scan over repeating
+*groups* of blocks plus an unrolled tail; enc-dec models scan each stack.
+
+The cross-entropy loss is computed in sequence chunks so the (B, S, vocab)
+logits tensor is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.params import hybrid_structure
+
+LOSS_CHUNK = 1024
+
+
+def cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return e.astype(cdt(cfg))
+
+
+def head_logits(params, cfg: ModelConfig, x):
+    """x: (..., D) -> f32 logits (..., V)."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"],
+                            preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:   # mask pad columns (never predicted)
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.float32(-1e30))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_proj(x, p, rope, *, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if rope is not None:
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _attn_out(o, p, dtype):
+    # no f32 preferred type: the cross-shard TP all-reduce of this partial
+    # sum should carry bf16 (the MXU still accumulates f32 per shard)
+    return jnp.einsum("bshk,hkd->bsd", o.astype(dtype), p["wo"]).astype(dtype)
+
+
+def _pad_head_groups(q, Hkv, pad_to):
+    """Pad Q heads per KV group so total heads divide the model axis.
+
+    24 heads on a 16-wide model axis replicate the ENTIRE attention on
+    every shard (measured 16x wasted FLOPs on llama3.2-3b prefill); padding
+    each GQA group with zero heads (sliced off after attention) makes heads
+    shardable at +33% attention FLOPs -> net ~12x.
+    """
+    B, S, Hq, dh = q.shape
+    if not pad_to or Hq % pad_to == 0:
+        return q, Hq
+    G = Hq // Hkv
+    Gp = G
+    while (Hkv * Gp) % pad_to:
+        Gp += 1
+    qg = q.reshape(B, S, Hkv, G, dh)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    return qg.reshape(B, S, Hkv * Gp, dh), Hq
+
+
+def _shard_padded_heads(q, cfg):
+    """Pin the padded head dim to the model axis (needs mesh context)."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return lax.with_sharding_constraint(
+            q, P(cfg.batch_axes, None, "model", None))
+    except Exception:        # no mesh context (single-device tests)
+        return q
+
+
+def _unpad_heads(o, Hkv, Hq, Hq_padded):
+    if Hq_padded == Hq:
+        return o
+    B, S, _, dh = o.shape
+    G, Gp = Hq // Hkv, Hq_padded // Hkv
+    og = o.reshape(B, S, Hkv, Gp, dh)[:, :, :, :G]
+    return og.reshape(B, S, Hq, dh)
+
+
+def attn_block(x, p, cfg: ModelConfig, rope, *, causal=True, window=0,
+               unroll=False, kv=None):
+    """Self- (kv=None) or cross- (kv=(K,V) precomputed) attention."""
+    q, k, v = _attn_proj(x, p, rope if kv is None else None, cfg=cfg)
+    if kv is not None:
+        k, v = kv
+        if rope is not None:
+            cos, sin = rope
+            q = L.apply_rope(q, cos, sin)
+    Hq = q.shape[2]
+    q, Hq_real = _pad_head_groups(q, k.shape[2], cfg.head_pad_to)
+    if q.shape[2] != Hq_real:
+        q = _shard_padded_heads(q, cfg)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q, k, v, causal, window,
+                            min(cfg.attn_block_q, q.shape[1]),
+                            min(cfg.attn_block_kv, k.shape[1]))
+    else:
+        o = L.blocked_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            unroll=unroll)
+    o = _unpad_heads(o, k.shape[2], Hq_real, q.shape[2])
+    return _attn_out(o, p, x.dtype), (k, v)
+
+
+def _ffn(x, lp, cfg: ModelConfig, unroll=False, dropless=False):
+    if "moe" in lp:
+        return moe_mod.moe_apply(x, lp["moe"], cfg, unroll=unroll,
+                                 dropless=dropless)
+    return L.mlp_apply(x, lp["mlp"], cfg.activation), {}
+
+
+def apply_layer(x, lp, cfg: ModelConfig, layer_type: str, rope, *,
+                window=0, unroll=False, causal=True):
+    """One block (full-seq).  Returns (x, state_for_decode, aux)."""
+    aux = {}
+    if layer_type in ("attn", "enc"):
+        a, (k, v) = attn_block(L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                               cfg, rope, causal=causal, window=window,
+                               unroll=unroll)
+        h = x + a
+        f, aux = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                      unroll=unroll)
+        return h + f, {"k": k, "v": v}, aux
+    if layer_type == "rec":
+        r, state = rglru_mod.rglru_block_apply(
+            L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["rec"], cfg,
+            unroll=unroll)
+        h = x + r
+        f, aux = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                      unroll=unroll)
+        return h + f, state, aux
+    if layer_type == "ssd":
+        s, state = ssd_mod.ssd_block_apply(
+            L.rms_norm(x, lp["ln"], cfg.norm_eps), lp["ssd"], cfg,
+            unroll=unroll)
+        return x + s, state, aux
+    raise ValueError(layer_type)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _wsc_tree(lp, specs):
+    """Constrain (GSPMD mode: PartitionSpec leaves) or explicitly gather
+    (shard_map mode: callable leaves) a layer-param subtree."""
+    if specs is None:
+        return lp
+
+    def apply(w, s):
+        return s(w) if callable(s) else lax.with_sharding_constraint(w, s)
+
+    return jax.tree.map(apply, lp, specs)
+
+
+def _seq_gather(x, cfg: ModelConfig):
+    """Explicit all-gather of the seq axis at layer entry (SP discipline).
+
+    Without this pin, GSPMD may resolve the seq-sharded carry by
+    replicating the *batch* axis instead (observed: a 17 GB fully
+    replicated attention operand).
+    """
+    if not cfg.seq_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return lax.with_sharding_constraint(x, P(cfg.batch_axes, None, None))
+
+
+def _seq_constrain(x, cfg: ModelConfig):
+    """Shard the saved residual stream over 'model' along the seq axis.
+
+    Megatron-SP for the scan carry: the only tensor checkpointed per layer
+    under remat is x (B, S, D); constraining its S axis to the model axis
+    cuts saved-activation memory by the TP degree.  GSPMD inserts the
+    all-gather at the next layer's first use.
+    """
+    if not cfg.seq_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return lax.with_sharding_constraint(x, P(cfg.batch_axes, "model", None))
+
+
+# ---------------------------------------------------------------------------
+# Forward (decoder-only + VLM)
+# ---------------------------------------------------------------------------
+
+def _rope_for(cfg: ModelConfig, positions, extras):
+    if cfg.rope_type == "none":
+        return None
+    if cfg.rope_type == "mrope":
+        pid = extras["position_ids"]          # (3, B, S)
+        return L.mrope_tables(pid, cfg.head_dim, cfg.rope_theta,
+                              cfg.mrope_sections)
+    return L.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _merge_vlm(params, cfg: ModelConfig, tokens, extras):
+    """VLM stub frontend: concat precomputed patch embeds + text embeds."""
+    ve = extras["vision_embeds"].astype(cdt(cfg))       # (B, Sv, D)
+    te = embed_tokens(params, cfg, tokens)              # (B, St, D)
+    return jnp.concatenate([ve, te], axis=1)
+
+
+def forward(params, cfg: ModelConfig, tokens, extras=None, *, unroll=False,
+            return_states=False, gather_specs=None, state_fn=None):
+    """Full-sequence forward to final hidden states (B, S, D).
+
+    ``state_fn(state, layer_type)`` transforms per-layer decode states
+    BEFORE they are stacked by the scan — prefill passes the ring-arrange
+    so sliding-window caches never stack the full sequence.
+    """
+    sfn = state_fn or (lambda s, t: s)
+    extras = extras or {}
+    if cfg.family == "vlm":
+        x = _merge_vlm(params, cfg, tokens, extras)
+    else:
+        x = embed_tokens(params, cfg, tokens)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+    rope = _rope_for(cfg, positions, extras)
+
+    states = {}
+    if cfg.family == "encdec":
+        raise ValueError("use encdec_forward")
+    if cfg.block_pattern:
+        pattern, n_groups, tail = hybrid_structure(cfg)
+
+        def group_body(x, gp):
+            x = _seq_gather(x, cfg)
+            gp = _wsc_tree(gp, gather_specs and gather_specs.get("groups"))
+            aux_t = jnp.zeros((), jnp.float32)
+            st = {}
+            for i, t in enumerate(pattern):
+                w = cfg.local_window if t == "attn" else 0
+                x, s, aux = apply_layer(x, gp[f"b{i}_{t}"], cfg, t, rope,
+                                        window=w, unroll=unroll)
+                st[f"b{i}_{t}"] = sfn(s, t) if return_states else s
+                aux_t = aux_t + aux.get("lb_loss", 0.0)
+            ys = (st, aux_t) if return_states else ({}, aux_t)
+            return _seq_constrain(x, cfg), ys
+
+        body = _maybe_remat(group_body, cfg)
+        x, (gstates, gaux) = lax.scan(body, x, params["groups"])
+        aux_total = gaux.sum()
+        tail_states = {}
+        for name, lp in params["tail"].items():
+            t = name.split("_", 1)[1]
+            w = cfg.local_window if t == "attn" else 0
+            x, s, aux = apply_layer(x, lp, cfg, t, rope, window=w,
+                                    unroll=unroll)
+            tail_states[name] = sfn(s, t) if return_states else s
+            aux_total = aux_total + aux.get("lb_loss", 0.0)
+        states = {"groups": gstates, "tail": tail_states}
+    else:
+        lt = cfg.layer_types()[0]
+        window = cfg.window if lt == "attn" else 0
+
+        def layer_body(x, lp):
+            x = _seq_gather(x, cfg)
+            lp = _wsc_tree(lp, gather_specs and gather_specs.get("layers"))
+            x, s, aux = apply_layer(x, lp, cfg, lt, rope, window=window,
+                                    unroll=unroll)
+            s = sfn(s, lt) if return_states else {}
+            return _seq_constrain(x, cfg), (s, aux.get("lb_loss",
+                                                       jnp.zeros((), jnp.float32)))
+
+        body = _maybe_remat(layer_body, cfg)
+        if unroll:
+            sts, auxs = [], []
+            xcur = x
+            nl = cfg.n_layers
+            for i in range(nl):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                xcur, (s, a) = layer_body(xcur, lp)
+                sts.append(s); auxs.append(a)
+            x = xcur
+            states = {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *sts)}
+            aux_total = jnp.stack(auxs).sum()
+        else:
+            x, (lstates, laux) = lax.scan(body, x, params["layers"])
+            states = {"layers": lstates}
+            aux_total = laux.sum()
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_states:
+        return x, states, aux_total
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frame_embeds, *, unroll=False,
+           gather_specs=None):
+    """frame_embeds: (B, S_src, D) precomputed by the stub frontend."""
+    x = frame_embeds.astype(cdt(cfg))
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+    rope = _rope_for(cfg, positions, {})
+
+    def body(x, lp):
+        x = _seq_gather(x, cfg)
+        lp = _wsc_tree(lp, gather_specs and gather_specs.get("enc_layers"))
+        x, _, _ = apply_layer(x, lp, cfg, "enc", rope, causal=False,
+                              unroll=unroll)
+        return _seq_constrain(x, cfg), None
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens, enc_out, *,
+                    unroll=False, return_states=False, gather_specs=None):
+    x = embed_tokens(params, cfg, tokens)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :] * jnp.ones((B, 1), jnp.int32)
+    rope = _rope_for(cfg, positions, {})
+
+    def body_states(x, lp):
+        a, (sk, sv) = attn_block(L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                 lp["attn"], cfg, rope, causal=True,
+                                 unroll=unroll)
+        h = x + a
+        cq = jnp.einsum("bsd,dhk->bshk", L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        lp["cross"]["wq"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        co = L.blocked_attention(cq, ck, cv, causal=False,
+                                 block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv, unroll=unroll)
+        h = h + _attn_out(co, lp["cross"], x.dtype)
+        f, _ = _ffn(L.rms_norm(h, lp["ln3"], cfg.norm_eps), lp, cfg,
+                    unroll=unroll)
+        return h + f, {"k": sk, "v": sv, "ck": ck, "cv": cv}
+
+    def body(x, lp):
+        x = _seq_gather(x, cfg)
+        lp = _wsc_tree(lp, gather_specs and gather_specs.get("dec_layers"))
+        a, _ = attn_block(L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                          cfg, rope, causal=True, unroll=unroll)
+        h = x + a
+        cq = jnp.einsum("bsd,dhk->bshk", L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        lp["cross"]["wq"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        co = L.blocked_attention(cq, ck, cv, causal=False,
+                                 block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv, unroll=unroll)
+        h = h + _attn_out(co, lp["cross"], x.dtype)
+        f, _ = _ffn(L.rms_norm(h, lp["ln3"], cfg.norm_eps), lp, cfg,
+                    unroll=unroll)
+        return _seq_constrain(h + f, cfg), None
+
+    if return_states:
+        x, states = lax.scan(body_states, x, params["dec_layers"])
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps), states
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["dec_layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, cfg: ModelConfig, tokens, extras, *, unroll=False,
+                   gather_specs=None):
+    enc_out = encode(params, cfg, extras["frame_embeds"], unroll=unroll,
+                     gather_specs=gather_specs)
+    x = decoder_forward(params, cfg, tokens, enc_out, unroll=unroll,
+                        gather_specs=gather_specs)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(params, cfg: ModelConfig, x, targets, mask, *,
+                    unroll=False):
+    """x: (B,S,D) final hiddens; never materializes (B,S,V)."""
+    B, S, D = x.shape
+    chunk = min(LOSS_CHUNK, S)
+    assert S % chunk == 0
+    nch = S // chunk
+    xr = x.reshape(B, nch, chunk, D).transpose(1, 0, 2, 3)
+    tr = targets.reshape(B, nch, chunk).transpose(1, 0, 2)
+    mr = mask.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xc, tc, mc = inp
+        logits = head_logits(params, cfg, xc)                 # (B,chunk,V) f32
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if unroll:
+        carry = init
+        for i in range(nch):
+            carry, _ = body(carry, (xr[i], tr[i], mr[i]))
+    else:
+        carry, _ = lax.scan(body, init, (xr, tr, mr))
+    total, count = carry
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, unroll=False,
+            aux_weight: float = 0.01, gather_specs=None):
+    """batch: tokens/targets/mask (+ per-family extras)."""
+    extras = {k: v for k, v in batch.items()
+              if k not in ("tokens", "targets", "mask")}
+    if cfg.family == "encdec":
+        x, aux = encdec_forward(params, cfg, batch["tokens"], extras,
+                                unroll=unroll, gather_specs=gather_specs)
+    else:
+        x, aux = forward(params, cfg, batch["tokens"], extras, unroll=unroll,
+                         gather_specs=gather_specs)
+    ce = chunked_ce_loss(params, cfg, x, batch["targets"], batch["mask"],
+                         unroll=unroll)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig, SimulatedFailure
+from repro.runtime.failure import FailureInjector, HeartbeatMonitor
+from repro.runtime.elastic import degraded_mesh, rebatch_for

@@ -1,0 +1,37 @@
+"""Elastic scaling: degraded meshes and batch re-fitting.
+
+When a chiplet group (mesh row) dies, the survivors form the largest
+rectangular sub-mesh excluding it; the checkpoint restores onto the new
+mesh via reshard-on-load (checkpoint.manager).  Algorithm 2's wrap-around
+arithmetic keeps shard->group affinity contiguous on the survivors.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def degraded_mesh(axis_sizes: Tuple[int, int], failed_rows: Sequence[int],
+                  devices=None):
+    """(data, model) mesh minus failed data-rows (chiplet groups).
+
+    Returns (mesh, kept_rows).  The model axis is preserved (TP intact);
+    data parallelism shrinks — the ARCAS compact/spread trade re-evaluates
+    on the survivor topology.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    data, model = axis_sizes
+    devices = list(jax.devices())[:data * model] if devices is None \
+        else list(devices)
+    arr = np.asarray(devices, dtype=object).reshape(data, model)
+    kept = [r for r in range(data) if r not in set(failed_rows)]
+    sub = arr[kept, :]
+    return Mesh(sub, ("data", "model")), kept
+
+
+def rebatch_for(global_batch: int, data_shards: int) -> int:
+    """Largest batch <= global_batch divisible by the surviving shards."""
+    return max(data_shards, (global_batch // data_shards) * data_shards)

@@ -1,0 +1,186 @@
+"""Training loop integrating every substrate:
+
+  data -> device_put(batch shardings) -> jitted train_step ->
+  ARCAS scheduler (counters + Algorithm 1 + migration) ->
+  checkpoint (atomic/async) -> failure injection / straggler detection.
+
+The per-step "remote access" counter (Algorithm 1's cache-fill events) is
+fed from the compiled step's HLO collective parse — on relayout the step is
+re-jitted on the new mesh and the counter constants refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.compression.grad_compress import (init_compression,
+                                             int8_compress_transform)
+from repro.core.controller import ControllerConfig
+from repro.core.counters import PerfCounters
+from repro.core.layout import Layout
+from repro.core.scheduler import GlobalScheduler
+from repro.core.topology import ChipletTopology
+from repro.launch import sharding as shlib
+from repro.launch import hlo_analysis as ha
+from repro.launch.steps import make_train_step
+from repro.models.params import abstract_params, init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime.failure import (FailureInjector, SimulatedFailure,
+                                   StragglerDetector)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    microbatches: int = 1
+    seed: int = 0
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    compress_cross_pod: bool = False
+    arcas: bool = True
+    log_every: int = 10
+    async_ckpt: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, loader, tcfg: TrainerConfig,
+                 *, topology: Optional[ChipletTopology] = None,
+                 controller_cfg: Optional[ControllerConfig] = None,
+                 failure: Optional[FailureInjector] = None,
+                 log: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.loader = loader
+        self.tcfg = tcfg
+        self.failure = failure
+        self.log = log
+        self.counters = PerfCounters()
+        self.straggler = StragglerDetector()
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.scheduler = None
+        if tcfg.arcas and topology is not None:
+            self.scheduler = GlobalScheduler(
+                topology, controller_cfg, counters=self.counters)
+        self.step = 0
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self, restore: bool = False):
+        cfg, mesh = self.cfg, self.mesh
+        fsdp = False
+        self.pspecs = shlib.param_specs(cfg, mesh, fsdp=fsdp)
+        self.psh = shlib.named(mesh, self.pspecs)
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params_host = init_params(cfg, key)
+        self.params = jax.device_put(params_host, self.psh)
+        self.opt_state = init_opt_state(self.params)
+        ospecs = shlib.opt_specs(cfg, mesh, self.pspecs)
+        self.osh = shlib.named(mesh, ospecs)
+        self.opt_state = jax.device_put(self.opt_state, self.osh)
+
+        transform = None
+        if self.tcfg.compress_cross_pod:
+            self._ef = init_compression(self.params)["ef"]
+
+            def transform(grads):
+                g, self._ef_new = int8_compress_transform(grads, self._ef)
+                return g
+
+        step_fn = make_train_step(cfg, self.tcfg.opt,
+                                  grad_transform=transform,
+                                  microbatches=self.tcfg.microbatches)
+        self._jit_step = jax.jit(
+            step_fn, out_shardings=(self.psh, self.osh, None),
+            donate_argnums=(0, 1))
+        self._batch_sharding = shlib.named(
+            mesh, shlib.batch_specs(cfg, None, mesh))
+        self._hlo_bytes = None  # filled after first compile
+
+    def _put_batch(self, np_batch: Dict[str, np.ndarray]):
+        out = {}
+        for k, v in np_batch.items():
+            shd = self._batch_sharding.get(k)
+            out[k] = jax.device_put(v, shd)
+        return out
+
+    # ------------------------------------------------------------------
+    def resume_if_possible(self) -> bool:
+        latest = self.ckpt.latest()
+        if latest is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        shardings = {"params": self.psh, "opt": self.osh}
+        restored, meta = self.ckpt.restore(state, shardings=shardings)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = int(meta["step"])
+        if "loader" in meta:
+            self.loader.load_state_dict(meta["loader"])
+        self.log(f"[trainer] resumed from step {self.step}")
+        return True
+
+    def _collective_feed(self, compiled_text: str):
+        stats = ha.collective_bytes(compiled_text, multi_pod=False)
+        self._hlo_bytes = {
+            "remote": stats.remote_bytes,
+            "local": stats.per_class_bytes.get("intra_group", 0.0),
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        steps = steps or self.tcfg.steps
+        losses = []
+        t_train0 = time.monotonic()
+        while self.step < steps:
+            if self.failure is not None:
+                self.failure.check(self.step)
+            block = self.loader.next()
+            from repro.data.pipeline import make_batch
+            batch = self._put_batch(make_batch(self.cfg, block))
+            t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            losses.append(loss)
+            self.step += 1
+
+            if self._hlo_bytes is None:
+                try:
+                    # pull collective constants from the compiled step once
+                    txt = self._jit_step.lower(
+                        self.params, self.opt_state, batch).compile().as_text()
+                    self._collective_feed(txt)
+                except Exception:   # noqa: BLE001
+                    self._hlo_bytes = {"remote": 0.0, "local": 0.0}
+
+            slow = self.straggler.observe(dt)
+            self.counters.record_step(
+                step_time=dt,
+                remote_bytes=self._hlo_bytes["remote"] * (2 if slow else 1),
+                local_bytes=self._hlo_bytes["local"])
+            if self.scheduler is not None:
+                self.scheduler.after_step()
+
+            if self.step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {self.step} loss {loss:.4f} "
+                         f"({dt*1e3:.0f} ms)")
+            if self.step % self.tcfg.ckpt_every == 0 or self.step == steps:
+                self.ckpt.save(
+                    self.step,
+                    {"params": self.params, "opt": self.opt_state},
+                    metadata={"loader": self.loader.state_dict()},
+                    blocking=not self.tcfg.async_ckpt)
+        self.ckpt.wait()
+        return {"losses": losses, "steps": self.step,
+                "wall": time.monotonic() - t_train0,
+                "straggler_events": list(self.straggler.events),
+                "counters": self.counters.snapshot()}

@@ -1,0 +1,227 @@
+"""Serving engine: continuous batching over chiplet-group replicas.
+
+ARCAS mapping (the paper's runtime, applied to inference):
+  * every request is a COROUTINE (prefill step, then one yield per decode
+    step) scheduled by the §4.4 task runtime;
+  * the fleet is partitioned into replica groups by the current Layout
+    (spread_rate): compact layout = many small replicas (low latency, small
+    aggregate KV "cache" per replica = LocalCache), spread = few big
+    replicas (large aggregate KV = DistributedCache);
+  * waiting requests are WORK-STOLEN between group queues, same-pod first;
+  * the adaptive controller watches the remote-counter analogue
+    (cross-group steals + KV-pressure overflow) and re-spreads/compacts.
+
+On this CPU container the model compute is real (tiny configs) while the
+replica groups are logical queues over the same device — the scheduling,
+batching, stealing and controller behavior is exactly the code a TPU
+deployment would run host-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import AdaptiveController, ControllerConfig
+from repro.core.counters import PerfCounters
+from repro.core.layout import Layout
+from repro.core.tasks import TaskRuntime
+from repro.core.topology import ChipletTopology
+from repro.models import decode as dec
+from repro.models.params import init_params
+from repro.launch.steps import make_prefill, make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new: int
+    arrived: float = 0.0
+    group: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8                 # decode slots per replica group
+    max_len: int = 256
+    adaptive: bool = True
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=lambda: ControllerConfig(
+            scheduler_timer=8, threshold=4.0, min_dwell=2))
+
+
+class _Group:
+    """One replica group: decode slots + its own cache pool."""
+
+    def __init__(self, gid: int, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.gid = gid
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
+        self.cache = dec.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
+        self.pos = jnp.zeros((ecfg.max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self.steps = 0
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def kv_pressure(self) -> float:
+        used = sum(1 for s in self.slots if s is not None)
+        return used / max(1, len(self.slots))
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, topology: ChipletTopology,
+                 ecfg: EngineConfig = EngineConfig(), *, seed: int = 0,
+                 spread_rate: int = 1):
+        self.cfg = cfg
+        self.topology = topology
+        self.ecfg = ecfg
+        self.counters = PerfCounters()
+        self.runtime = TaskRuntime(
+            n_pods=topology.n_pods, groups_per_pod=topology.groups_per_pod,
+            counters=self.counters)
+        self.controller = AdaptiveController(
+            topology, ecfg.controller, spread_rate=spread_rate)
+        self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(make_prefill(cfg, max_len=ecfg.max_len))
+        self._decode = jax.jit(make_serve_step(cfg))
+        self._rid = itertools.count()
+        self._clock = time.monotonic
+        self._build_groups()
+        self.trace: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _n_groups(self) -> int:
+        return self.controller.layout().replicas
+
+    def _build_groups(self):
+        self.groups = [_Group(g, self.cfg, self.params, self.ecfg)
+                       for g in range(self._n_groups())]
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new,
+                      arrived=self._clock())
+        # route to least-pressured group (global scheduler placement)
+        g = min(self.groups, key=lambda gr: (gr.kv_pressure(), len(gr.queue)))
+        req.group = g.gid
+        g.queue.append(req)
+        return req
+
+    # -- chiplet-first stealing of queued requests ---------------------------
+    def _steal_for(self, g: "_Group") -> Optional[Request]:
+        donors = sorted((o for o in self.groups
+                         if o is not g and o.queue),
+                        key=lambda o: -len(o.queue))
+        if not donors:
+            return None
+        victim = donors[0]
+        req = victim.queue.pop(0)
+        self.counters.add("remote_bytes",
+                          float(len(req.prompt) * 2))   # moved KV bytes
+        self.counters.add("steals_group", 1)
+        req.group = g.gid
+        return req
+
+    # -- one engine tick: admit + prefill + batched decode --------------------
+    def _admit(self, g: "_Group"):
+        for slot in g.free_slots():
+            req = g.queue.pop(0) if g.queue else self._steal_for(g)
+            if req is None:
+                break
+            prompt = req.prompt[None, :]
+            logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+            nxt = int(jnp.argmax(logits[0]))
+            req.generated.append(nxt)
+            req.t_first = self._clock()
+            # copy single-stream cache into the group slot
+            def write(pool, one):
+                return jax.tree.map(
+                    lambda p, o: p.at[:, slot].set(o[:, 0]) if p.ndim >= 2
+                    else p, pool, one)
+            g.cache = jax.tree.map(
+                lambda pool, one: pool.at[:, slot].set(one[:, 0]),
+                g.cache, cache1)
+            g.slots[slot] = req
+            g.pos = g.pos.at[slot].set(len(req.prompt))
+            g.tokens = g.tokens.at[slot, 0].set(nxt)
+            self.counters.add("prefills", 1)
+
+    def _decode_tick(self, g: "_Group"):
+        if not any(s is not None for s in g.slots):
+            return
+        logits, g.cache = self._decode(self.params, g.cache, g.tokens, g.pos)
+        nxt = jnp.argmax(logits, axis=-1)
+        g.pos = g.pos + jnp.where(
+            jnp.array([s is not None for s in g.slots]), 1, 0)
+        g.tokens = nxt[:, None].astype(jnp.int32)
+        g.steps += 1
+        now = self._clock()
+        for i, req in enumerate(g.slots):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[i]))
+            if len(req.generated) >= req.max_new:
+                req.t_done = now
+                g.slots[i] = None
+        self.counters.add("decode_steps", 1)
+        self.counters.add("decode_tokens",
+                          sum(1 for s in g.slots if s is not None))
+
+    # -- engine task (coroutine per group, scheduled by the task runtime) ----
+    def _group_task(self, g: "_Group"):
+        while True:
+            busy = bool(g.queue) or any(s is not None for s in g.slots)
+            others_waiting = any(o.queue for o in self.groups)
+            if not busy and not others_waiting:
+                return
+            self._admit(g)
+            self._decode_tick(g)
+            yield   # yield point: profiler + possible migration
+
+    def run_until_done(self, *, max_rounds: int = 100000) -> Dict:
+        trace: List[int] = []
+        for g in self.groups:
+            self.runtime.spawn(self._group_task(g), group=g.gid,
+                               name=f"group{g.gid}")
+        self.runtime.run(concurrency_trace=trace, max_rounds=max_rounds)
+        if self.ecfg.adaptive:
+            d = self.controller.maybe_reschedule(self.counters)
+            if d is not None:
+                self.trace.append(dataclasses.asdict(d))
+        return {"concurrency": trace, "counters": self.counters.snapshot(),
+                "decisions": [dataclasses.asdict(x)
+                              for x in self.controller.decisions]}
+
+    # -- latency stats ---------------------------------------------------------
+    @staticmethod
+    def stats(reqs: List[Request]) -> Dict[str, float]:
+        done = [r for r in reqs if r.done]
+        if not done:
+            return {}
+        ttft = [r.t_first - r.arrived for r in done]
+        total = [r.t_done - r.arrived for r in done]
+        return {
+            "n": len(done),
+            "ttft_mean": float(np.mean(ttft)),
+            "latency_mean": float(np.mean(total)),
+            "latency_p95": float(np.percentile(total, 95)),
+            "tokens": sum(len(r.generated) for r in done),
+        }

@@ -1,0 +1,43 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 real CPU device;
+multi-device dry-run behavior is tested via subprocesses (test_dryrun.py).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced_config
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(params=sorted(REGISTRY))
+def arch_cfg(request):
+    return reduced_config(REGISTRY[request.param])
+
+
+def make_inputs(cfg, key, B=2, S=32):
+    """Batch dict for a reduced config (any family)."""
+    import jax.numpy as jnp
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens,
+             "targets": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "vlm":
+        sv = int(S * cfg.vision_frac)
+        batch["tokens"] = tokens[:, :S - sv]
+        batch["vision_embeds"] = jax.random.normal(key, (B, sv, cfg.d_model)) * 0.1
+        batch["position_ids"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        st = S // 2
+        batch["frame_embeds"] = jax.random.normal(key, (B, st, cfg.d_model)) * 0.1
+        batch["tokens"] = tokens[:, :st]
+        batch["targets"] = batch["targets"][:, :st]
+        batch["mask"] = batch["mask"][:, :st]
+    return batch

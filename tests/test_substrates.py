@@ -1,0 +1,300 @@
+"""Substrate tests: optimizer (f32 + 8-bit), data pipeline determinism,
+checkpoint roundtrip + elastic reshard, compression error feedback,
+failure/straggler handling, serving engine invariants."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_inputs
+from repro.configs import REGISTRY, reduced_config
+from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
+from repro.compression.grad_compress import (init_compression,
+                                             int8_compress_transform,
+                                             topk_compress_transform)
+from repro.core.topology import ChipletTopology
+from repro.data.pipeline import (ShardedLoader, SyntheticCorpus, make_batch,
+                                 write_corpus_shards)
+from repro.models import params as P
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, \
+    lr_schedule
+from repro.optim.quantized import adamw8bit_update, init_opt_state_8bit
+from repro.runtime.elastic import degraded_mesh, rebatch_for
+from repro.runtime.failure import StragglerDetector
+
+KEY = jax.random.PRNGKey(5)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    """min ||Wx - y||^2: AdamW should drive the loss down fast."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    W_true = jax.random.normal(k1, (16, 8))
+    X = jax.random.normal(k2, (64, 16))
+    Y = X @ W_true
+    params = {"w": jax.random.normal(k3, (16, 8)) * 0.1}
+    loss = lambda p: jnp.mean((X @ p["w"] - Y) ** 2)
+    return params, loss
+
+
+def test_adamw_reduces_loss():
+    params, loss = _quad_problem()
+    state = init_opt_state(params)
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw8bit_tracks_fp32():
+    """8-bit AdamW trajectory stays close to f32 AdamW."""
+    params, loss = _quad_problem()
+    p32, p8 = params, params
+    s32 = init_opt_state(params)
+    s8 = init_opt_state_8bit(params)
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    for _ in range(60):
+        g32 = jax.grad(loss)(p32)
+        g8 = jax.grad(loss)(p8)
+        p32, s32, _ = adamw_update(g32, s32, p32, cfg)
+        p8, s8, _ = adamw8bit_update(g8, s8, p8, cfg)
+    l32, l8 = float(loss(p32)), float(loss(p8))
+    assert l8 < 0.15 * float(loss(params))       # converges
+    assert l8 < max(4.0 * l32, 0.02)             # close to fp32 quality
+    # moments really are 8-bit
+    assert s8["m"]["w"]["q"].dtype == jnp.int8
+    assert s8["v"]["w"]["q"].dtype == jnp.uint8
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(lr_schedule(cfg, jnp.int32(0))) == 0.0
+    assert float(lr_schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr_schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_corpus_deterministic(tmp_path):
+    c1 = SyntheticCorpus(1000, seed=7)
+    c2 = SyntheticCorpus(1000, seed=7)
+    np.testing.assert_array_equal(c1.shard_tokens(3, 1000),
+                                  c2.shard_tokens(3, 1000))
+    assert not np.array_equal(c1.shard_tokens(3, 1000),
+                              c1.shard_tokens(4, 1000))
+
+
+def test_loader_sharding_and_resume(tmp_path):
+    corpus = SyntheticCorpus(512, seed=1)
+    files = write_corpus_shards(str(tmp_path), corpus, n_shards=4,
+                                tokens_per_shard=4000)
+    l_all = ShardedLoader(files, seq_len=16, batch=2)
+    b1 = l_all.next()
+    b2 = l_all.next()
+    assert b1.shape == (2, 17)
+    assert not np.array_equal(b1, b2)
+    # resume from state: same position -> same next block
+    state = l_all.state_dict()
+    b3 = l_all.next()
+    l_resumed = ShardedLoader(files, seq_len=16, batch=2)
+    l_resumed.load_state_dict(state)
+    np.testing.assert_array_equal(b3, l_resumed.next())
+    # host sharding: different hosts read disjoint shards
+    h0 = ShardedLoader(files, host=0, n_hosts=2, seq_len=16, batch=2)
+    h1 = ShardedLoader(files, host=1, n_hosts=2, seq_len=16, batch=2)
+    assert not np.array_equal(h0.next(), h1.next())
+
+
+def test_make_batch_families(key=KEY):
+    for name in ("llama3-8b", "qwen2-vl-2b", "seamless-m4t-large-v2"):
+        cfg = reduced_config(REGISTRY[name])
+        block = np.random.default_rng(0).integers(
+            0, cfg.vocab, size=(2, 33)).astype(np.int32)
+        b = make_batch(cfg, block)
+        assert b["tokens"].dtype == np.int32
+        assert b["targets"].shape == b["mask"].shape
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+    save_pytree(str(tmp_path / "ck"), tree, metadata={"step": 3})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out, meta = load_pytree(str(tmp_path / "ck"), like)
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_manager_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, {"x": jnp.full((2,), s)})
+    assert mgr.latest() == 3
+    assert mgr.steps() == [2, 3]          # gc dropped step 1
+    out, meta = mgr.restore({"x": jnp.zeros((2,))})
+    assert meta["step"] == 3
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"x": jnp.ones((4,))}, blocking=False)
+    mgr.wait()
+    assert mgr.latest() == 1
+
+
+def test_elastic_reshard_on_load(tmp_path):
+    """Checkpoint saved replicated restores onto any target sharding."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as Pc
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_pytree(str(tmp_path / "ck"), tree)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shd = {"w": NamedSharding(mesh, Pc(None, "model"))}
+    out, _ = load_pytree(str(tmp_path / "ck"), tree, shardings=shd)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding == shd["w"]
+
+
+def test_degraded_mesh_and_rebatch():
+    mesh, kept = degraded_mesh((1, 1), failed_rows=[])
+    assert mesh.shape["data"] == 1
+    assert rebatch_for(256, 15) == 255
+    assert rebatch_for(7, 8) == 8
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_error_feedback_unbiased():
+    """With EF, the accumulated compressed signal converges to the truth."""
+    g_true = {"w": jnp.array([[0.3, -0.001, 0.7, 0.0002]] * 2)}
+    ef = init_compression(g_true)["ef"]
+    acc = jnp.zeros_like(g_true["w"])
+    for _ in range(50):
+        gq, ef = int8_compress_transform(g_true, ef)
+        acc = acc + gq["w"]
+    np.testing.assert_allclose(np.asarray(acc / 50),
+                               np.asarray(g_true["w"]), rtol=0.02, atol=1e-4)
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.array([[1.0, 0.1, -2.0, 0.01]])}
+    ef = init_compression(g)["ef"]
+    gq, ef = topk_compress_transform(g, ef, frac=0.5)
+    w = np.asarray(gq["w"][0])
+    assert w[2] == -2.0 and w[0] == 1.0
+    assert w[1] == 0.0 and w[3] == 0.0
+    # EF holds the dropped mass
+    np.testing.assert_allclose(np.asarray(ef["w"][0]),
+                               [0.0, 0.1, 0.0, 0.01], atol=1e-7)
+
+
+def test_compression_training_converges():
+    """int8+EF compressed training reaches ~uncompressed loss."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    W_true = jax.random.normal(k1, (8, 4))
+    X = jax.random.normal(k2, (32, 8))
+    Y = X @ W_true
+    loss = lambda p: jnp.mean((X @ p["w"] - Y) ** 2)
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=5, weight_decay=0.0)
+
+    def train(compressed):
+        p = {"w": jax.random.normal(k3, (8, 4)) * 0.1}
+        s = init_opt_state(p)
+        ef = init_compression(p)["ef"]
+        for _ in range(80):
+            g = jax.grad(loss)(p)
+            if compressed:
+                g, ef = int8_compress_transform(g, ef)
+            p, s, _ = adamw_update(g, s, p, cfg)
+        return float(loss(p))
+
+    lc, lu = train(True), train(False)
+    assert lc < max(3.0 * lu, 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# failure / straggler
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector():
+    det = StragglerDetector(factor=2.0, min_samples=3)
+    for _ in range(6):
+        det.observe(0.1)
+    assert det.observe(0.5) is True
+    assert det.observe(0.1) is False
+    assert len(det.events) == 1
+
+
+def test_heartbeat_monitor():
+    from repro.runtime.failure import HeartbeatMonitor
+    t = [0.0]
+    clock = lambda: t[0]
+    dead = []
+    mon = HeartbeatMonitor([0, 1], timeout=1.0, on_dead=dead.append,
+                           clock=clock)
+    t[0] = 0.5
+    mon.beat(0)
+    t[0] = 1.2
+    assert mon.check() == [1]
+    assert dead == [1]
+    t[0] = 1.9
+    assert mon.check() == [0]
+
+
+# ---------------------------------------------------------------------------
+# serving engine invariants
+# ---------------------------------------------------------------------------
+
+def test_serving_batched_equals_single():
+    """A request decoded in a batch == the same request decoded alone."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=2)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(2, cfg.vocab, size=8)
+
+    def run(n_extra):
+        eng = ServeEngine(cfg, topo, EngineConfig(max_batch=4, max_len=48),
+                          spread_rate=1, seed=0)
+        main = eng.submit(prompt, max_new=5)
+        extra = [eng.submit(rng.integers(2, cfg.vocab, size=8), 5)
+                 for _ in range(n_extra)]
+        eng.run_until_done()
+        return main.generated
+
+    assert run(0) == run(3)
+
+
+def test_serving_work_stealing_balances():
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["mamba2-780m"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
+    eng = ServeEngine(cfg, topo, EngineConfig(max_batch=1, max_len=32),
+                      spread_rate=1)
+    rng = np.random.default_rng(0)
+    # submit everything at once: queues imbalance -> steals must occur
+    reqs = [eng.submit(rng.integers(2, cfg.vocab, size=4), 3)
+            for _ in range(12)]
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert sum(g.steps for g in eng.groups) > 0
