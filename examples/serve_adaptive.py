@@ -37,6 +37,11 @@ def main():
     print("controller decisions:",
           [(d.step, d.old_spread, "->", d.new_spread, d.reason)
            for d in eng.controller.decisions])
+    print("live relayouts (mid-run group rebuilds):")
+    for r in eng.relayouts:
+        print(f"  step {r['step']}: {r['old_groups']} -> {r['new_groups']} "
+              f"groups, {r['moved_slots']} KV slots migrated, "
+              f"{r['requeued']} requests requeued")
     print("counters:", {k: round(v, 1) for k, v in
                         eng.counters.snapshot().items()
                         if "steal" in k or k in ("prefills", "decode_steps",

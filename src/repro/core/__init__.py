@@ -14,5 +14,7 @@ from repro.core.counters import PerfCounters
 from repro.core.layout import Layout, layout_family, update_location
 from repro.core.controller import AdaptiveController, ControllerConfig
 from repro.core.costmodel import estimate, best_layout, StepCost
-from repro.core.tasks import Task, TaskRuntime
-from repro.core.scheduler import GlobalScheduler, migrate_pytree
+from repro.core.tasks import BLOCK, Task, TaskRuntime
+from repro.core.scheduler import (GlobalScheduler, MigrationEvent,
+                                  RelayoutHandler, TieredQueues,
+                                  migrate_pytree)

@@ -1,16 +1,29 @@
-"""Global scheduler (paper §4.1 component 4).
+"""Global scheduler (paper §4.1 component 4) — the single owner of the
+adaptive controller, the coroutine task runtime and the current Layout.
 
-Owns the adaptive controller, the coroutine runtime and the current Layout;
-applies policies by *migrating* state: on a spread-rate change the params /
-optimizer / cache pytrees are ``jax.device_put`` to the new mesh's
-NamedShardings at a step boundary (the TPU analogue of moving threads and
+Both the Trainer and the ServeEngine run on this substrate.  The control
+loop is ``tick()``-driven: each tick advances the task runtime one round (a
+yield-point boundary for every running coroutine) and then evaluates
+Algorithm 1.  When the controller moves the spread rate, every registered
+``RelayoutHandler`` is invoked with the new Layout — handlers perform the
+actual state movement (``jax.device_put`` of param / optimizer / KV-cache
+pytrees onto the new mesh for training, replica-group merge/split with KV
+slot migration for serving: the TPU analogue of moving threads and
 rebinding memory).
+
+``TieredQueues`` exposes the §4.4 tier-ordered steal path for
+*request-level* objects (serving requests, IO work items), not just
+coroutines: pop drains the local queue first, then steals oldest-first from
+same-pod queues, then cross-pod — feeding the same remote-traffic counters
+Algorithm 1 thresholds on.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, \
+    Tuple
 
 import jax
 
@@ -19,6 +32,9 @@ from repro.core.counters import PerfCounters
 from repro.core.layout import Layout
 from repro.core.tasks import TaskRuntime
 from repro.core.topology import ChipletTopology
+
+# Called with (new_layout, decision) when Algorithm 1 moves the spread rate.
+RelayoutHandler = Callable[[Layout, Decision], None]
 
 
 @dataclasses.dataclass
@@ -33,7 +49,8 @@ class GlobalScheduler:
                  controller_cfg: Optional[ControllerConfig] = None,
                  *, spread_rate: int = 1, pod_axis: bool = False,
                  cost_fn=None, working_set_fn=None,
-                 counters: Optional[PerfCounters] = None):
+                 counters: Optional[PerfCounters] = None, seed: int = 0,
+                 control_enabled: bool = True):
         self.topology = topology
         self.counters = counters or PerfCounters()
         self.controller = AdaptiveController(
@@ -42,21 +59,37 @@ class GlobalScheduler:
             cost_fn=cost_fn, working_set_fn=working_set_fn)
         self.tasks = TaskRuntime(
             n_pods=topology.n_pods, groups_per_pod=topology.groups_per_pod,
-            counters=self.counters)
+            seed=seed, counters=self.counters)
+        self.control_enabled = control_enabled
         self.migrations: List[MigrationEvent] = []
+        self.last_active = 0            # tasks advanced by the latest tick
+        self._handlers: List[RelayoutHandler] = []
         self._step = 0
 
     # ------------------------------------------------------------------
     def layout(self) -> Layout:
         return self.controller.layout()
 
-    def after_step(self, *, step_metrics: Optional[Dict[str, float]] = None,
-                   migrate_fn: Optional[Callable[[Layout], None]] = None
-                   ) -> Optional[Decision]:
-        """Call once per training/serving step; may trigger a relayout.
+    def spawn(self, gen, **kw):
+        """Spawn a coroutine on the shared task runtime."""
+        return self.tasks.spawn(gen, **kw)
 
-        ``migrate_fn(new_layout)`` performs the actual state movement
-        (device_put of the param/opt/cache pytrees onto the new mesh).
+    def pending(self) -> bool:
+        return self.tasks.pending()
+
+    def register_relayout(self, handler: RelayoutHandler) -> RelayoutHandler:
+        """Register a handler invoked (new_layout, decision) on relayout."""
+        self._handlers.append(handler)
+        return handler
+
+    # ------------------------------------------------------------------
+    def tick(self, *, step_metrics: Optional[Dict[str, float]] = None,
+             run_tasks: bool = True) -> Optional[Decision]:
+        """One beat of the unified control loop.
+
+        Records step metrics, advances every runnable coroutine to its next
+        yield point, then runs one Algorithm-1 evaluation; on a spread-rate
+        change the registered RelayoutHandlers migrate live state.
         """
         self._step += 1
         if step_metrics:
@@ -66,13 +99,119 @@ class GlobalScheduler:
                 remote_bytes=step_metrics.get("remote_bytes", 0.0),
                 dcn_bytes=step_metrics.get("dcn_bytes", 0.0),
                 flops=step_metrics.get("flops", 0.0))
+        self.last_active = (self.tasks.tick()
+                            if run_tasks and self.tasks.pending() else 0)
+        return self._control()
+
+    def _control(self) -> Optional[Decision]:
+        if not self.control_enabled:
+            return None
         decision = self.controller.maybe_reschedule(self.counters)
-        if decision is not None and migrate_fn is not None:
+        if decision is not None:
             t0 = time.monotonic()
-            migrate_fn(self.layout())
+            new_layout = self.layout()
+            for h in self._handlers:
+                h(new_layout, decision)
             self.migrations.append(
                 MigrationEvent(self._step, decision, time.monotonic() - t0))
         return decision
+
+    def run_until_done(self, *, max_rounds: int = 10_000_000,
+                       concurrency_trace: Optional[List[int]] = None) -> int:
+        """Tick until the task runtime drains; returns rounds used.
+
+        Unlike ``TaskRuntime.run``, the controller fires *during* the run,
+        so relayout handlers may migrate state (and spawn replacement
+        coroutines) mid-flight.
+        """
+        rounds = 0
+        while self.tasks.pending() and rounds < max_rounds:
+            self.tick()
+            if concurrency_trace is not None:
+                concurrency_trace.append(self.last_active)
+            rounds += 1
+        if self.tasks.pending():
+            raise RuntimeError("GlobalScheduler.run_until_done exceeded "
+                               "max_rounds")
+        return rounds
+
+    # -- legacy single-shot entry (pre-tick API), kept for compatibility ---
+    def after_step(self, *, step_metrics: Optional[Dict[str, float]] = None,
+                   migrate_fn: Optional[Callable[[Layout], None]] = None
+                   ) -> Optional[Decision]:
+        """Deprecated: one control evaluation without driving tasks.
+        Prefer ``tick()`` with a registered RelayoutHandler."""
+        if migrate_fn is None:
+            return self.tick(step_metrics=step_metrics, run_tasks=False)
+        handler: RelayoutHandler = lambda layout, _d: migrate_fn(layout)
+        self._handlers.append(handler)
+        try:
+            return self.tick(step_metrics=step_metrics, run_tasks=False)
+        finally:
+            self._handlers.remove(handler)
+
+
+class TieredQueues:
+    """§4.4 tier-ordered work stealing for request-level objects.
+
+    Queue ``i`` belongs to pod ``pods[i]`` (for serving: one queue per
+    replica group, pod derived from the Layout).  ``pop(i)`` drains the
+    local queue first; otherwise it steals the oldest item from the fullest
+    same-pod queue, then cross-pod — counting ``steals_pod`` /
+    ``steals_fleet`` and feeding ``remote_bytes`` (plus ``dcn_bytes`` for
+    cross-pod moves) so Algorithm 1 sees request migration traffic exactly
+    like coroutine-steal traffic.
+    """
+
+    def __init__(self, pods: Sequence[int], *,
+                 counters: Optional[PerfCounters] = None,
+                 bytes_fn: Optional[Callable[[Any], float]] = None):
+        self._pods = list(pods)
+        self._qs: List[Deque[Any]] = [collections.deque() for _ in pods]
+        self.counters = counters or PerfCounters()
+        self._bytes_fn = bytes_fn or (lambda _item: 1.0)
+        by_pod: Dict[int, List[int]] = collections.defaultdict(list)
+        for qid, pod in enumerate(self._pods):
+            by_pod[pod].append(qid)
+        # precomputed steal tiers per queue: same-pod peers, then the rest
+        self._tiers: List[Tuple[Tuple[str, List[int]], ...]] = []
+        for qid, pod in enumerate(self._pods):
+            same = [j for j in by_pod[pod] if j != qid]
+            rest = [j for j in range(len(self._pods)) if self._pods[j] != pod]
+            self._tiers.append((("pod", same), ("fleet", rest)))
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._qs)
+
+    def pending(self) -> bool:
+        return any(self._qs)
+
+    def queue(self, qid: int) -> Deque[Any]:
+        """The underlying deque (read/len; prefer push/pop to mutate)."""
+        return self._qs[qid]
+
+    def push(self, qid: int, item: Any):
+        self._qs[qid].append(item)
+
+    def pop(self, qid: int) -> Tuple[Optional[Any], Optional[str]]:
+        """-> (item, tier) with tier in {"local", "pod", "fleet"}, or
+        (None, None) when every queue is empty."""
+        q = self._qs[qid]
+        if q:
+            return q.popleft(), "local"
+        for tier, cand in self._tiers[qid]:
+            victims = [j for j in cand if self._qs[j]]
+            if not victims:
+                continue
+            j = max(victims, key=lambda v: len(self._qs[v]))  # balance
+            item = self._qs[j].popleft()
+            moved = float(self._bytes_fn(item))
+            self.counters.add(f"steals_{tier}", 1)
+            self.counters.add("remote_bytes", moved)
+            if tier == "fleet":
+                self.counters.add("dcn_bytes", moved)
+            return item, tier
+        return None, None
 
 
 def migrate_pytree(tree: Any, shardings: Any) -> Any:

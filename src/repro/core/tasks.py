@@ -3,12 +3,29 @@ work stealing.
 
 Tasks are Python generators (user-level continuations with developer-defined
 yield points — the coroutine model of the paper).  Each *worker* owns a
-deque; a worker whose deque is empty steals: first from workers in the SAME
-chiplet group, then same pod, then anywhere — the locality-preserving steal
-order of §4.4.  The runtime is cooperative and deterministic (seeded steal
-order) so schedulers built on it are testable; at yield points the
-integrated profiler hook fires (§4.4: "when a coroutine yields, ARCAS's
-profiling system activates").
+priority deque; a worker whose deque is empty steals: first from workers in
+the SAME chiplet group, then same pod, then anywhere — the
+locality-preserving steal order of §4.4.
+
+The steal path is tiered and O(#nonempty): victim tiers are *precomputed*
+per worker at construction (group members, pod members) and the runtime
+maintains occupancy indexes (which workers currently have work, per group /
+per pod / fleet-wide), so an idle worker never rebuilds group/pod/fleet
+candidate lists with full worker scans.  The seed's scan-based steal is kept
+as ``steal_impl="scan"`` so ``benchmarks/sched_micro.py`` can measure the
+win.
+
+The runtime is cooperative and deterministic (seeded steal order) so
+schedulers built on it are testable; at yield points the integrated profiler
+hook fires (§4.4: "when a coroutine yields, ARCAS's profiling system
+activates").  ``run()`` drives everything to completion; ``tick()`` advances
+exactly one round so an outer control loop (the GlobalScheduler) can
+evaluate Algorithm 1 at yield-point boundaries.
+
+Tasks may park themselves by yielding the ``BLOCK`` sentinel (e.g. a request
+waiting on KV-cache space); ``TaskRuntime.unblock`` re-enqueues them on
+their home worker.  Higher ``priority`` tasks run before lower ones within a
+worker.
 
 On TPU the "work" scheduled here is host-side: serving requests,
 prefill/decode micro-steps, data prefetch, checkpoint IO.  Device compute
@@ -16,14 +33,21 @@ stays inside XLA programs.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import itertools
 import random
 import time
-from typing import Any, Callable, Deque, Dict, Generator, List, Optional
+from typing import Any, Callable, Deque, Dict, FrozenSet, Generator, List, \
+    Optional, Tuple
 
 from repro.core.counters import PerfCounters
+
+# Yield this sentinel to park the task until TaskRuntime.unblock(task).
+BLOCK = object()
+
+_EMPTY: FrozenSet[int] = frozenset()
 
 
 @dataclasses.dataclass
@@ -38,13 +62,16 @@ class Task:
     _ids = itertools.count()
 
     def __init__(self, gen: Generator, *, group: Optional[int] = None,
-                 name: str = ""):
+                 name: str = "", priority: int = 0):
         if not isinstance(gen, Generator):
             raise TypeError("Task wraps a generator (coroutine with yields)")
         self.id = next(Task._ids)
         self.gen = gen
         self.group = group              # preferred chiplet group (affinity)
         self.name = name or f"task{self.id}"
+        self.priority = priority        # higher runs first within a worker
+        self.state = "ready"            # ready | blocked | done
+        self.last_yield: Any = None     # value of the most recent yield
         self.stats = TaskStats(spawned_at=time.monotonic())
         self.result: Any = None
         self.done = False
@@ -52,33 +79,73 @@ class Task:
     def step(self) -> bool:
         """Advance to the next yield point.  True if finished."""
         try:
-            next(self.gen)
+            self.last_yield = next(self.gen)
             self.stats.yields += 1
             return False
         except StopIteration as e:
             self.result = getattr(e, "value", None)
             self.done = True
+            self.state = "done"
             self.stats.finished_at = time.monotonic()
             return True
 
 
 class Worker:
-    def __init__(self, wid: int, group: int, pod: int):
+    """Owns per-priority deques; notifies the runtime on empty<->nonempty
+    transitions so the tiered steal path can keep its occupancy indexes."""
+
+    def __init__(self, wid: int, group: int, pod: int,
+                 runtime: Optional["TaskRuntime"] = None):
         self.wid = wid
         self.group = group
         self.pod = pod
-        self.deque: Deque[Task] = collections.deque()
+        self._runtime = runtime
+        self._deques: Dict[int, Deque[Task]] = {}
+        self._prios: List[int] = []     # ascending; scanned from the back
+        self._size = 0
         self.executed_steps = 0
         self.stolen = 0
 
+    def __len__(self) -> int:
+        return self._size
+
+    @property
+    def deque(self) -> Tuple[Task, ...]:
+        """Read-only snapshot (legacy view), highest priority first."""
+        out: List[Task] = []
+        for p in reversed(self._prios):
+            out.extend(self._deques[p])
+        return tuple(out)
+
     def push(self, task: Task):
-        self.deque.append(task)
+        was_empty = self._size == 0
+        dq = self._deques.get(task.priority)
+        if dq is None:
+            dq = self._deques[task.priority] = collections.deque()
+            bisect.insort(self._prios, task.priority)
+        dq.append(task)
+        self._size += 1
+        if was_empty and self._runtime is not None:
+            self._runtime._mark_nonempty(self)
+
+    def _take(self, *, newest: bool) -> Optional[Task]:
+        if not self._size:
+            return None
+        for p in reversed(self._prios):
+            dq = self._deques[p]
+            if dq:
+                task = dq.pop() if newest else dq.popleft()
+                self._size -= 1
+                if self._size == 0 and self._runtime is not None:
+                    self._runtime._mark_empty(self)
+                return task
+        return None
 
     def pop_local(self) -> Optional[Task]:
-        return self.deque.pop() if self.deque else None     # LIFO own end
+        return self._take(newest=True)      # LIFO own end
 
     def steal_from(self) -> Optional[Task]:
-        return self.deque.popleft() if self.deque else None  # FIFO victim end
+        return self._take(newest=False)     # FIFO victim end
 
 
 class TaskRuntime:
@@ -87,7 +154,8 @@ class TaskRuntime:
     def __init__(self, *, n_pods: int = 1, groups_per_pod: int = 16,
                  workers_per_group: int = 1, seed: int = 0,
                  counters: Optional[PerfCounters] = None,
-                 profile_hook: Optional[Callable[[Task], None]] = None):
+                 profile_hook: Optional[Callable[[Task], None]] = None,
+                 steal_impl: str = "tiered"):
         self.counters = counters or PerfCounters()
         self.profile_hook = profile_hook
         self.workers: List[Worker] = []
@@ -95,30 +163,100 @@ class TaskRuntime:
             for g in range(groups_per_pod):
                 for _ in range(workers_per_group):
                     gid = pod * groups_per_pod + g
-                    self.workers.append(Worker(len(self.workers), gid, pod))
+                    self.workers.append(
+                        Worker(len(self.workers), gid, pod, runtime=self))
+        # precomputed victim tiers: static membership per group / per pod
+        self._group_members: Dict[int, FrozenSet[int]] = {}
+        self._pod_members: Dict[int, FrozenSet[int]] = {}
+        by_g: Dict[int, set] = collections.defaultdict(set)
+        by_p: Dict[int, set] = collections.defaultdict(set)
+        for w in self.workers:
+            by_g[w.group].add(w.wid)
+            by_p[w.pod].add(w.wid)
+        self._group_members = {g: frozenset(s) for g, s in by_g.items()}
+        self._pod_members = {p: frozenset(s) for p, s in by_p.items()}
+        # occupancy indexes: wids that currently have queued work
+        self._ne_group: Dict[int, set] = collections.defaultdict(set)
+        self._ne_pod: Dict[int, set] = collections.defaultdict(set)
+        self._ne_all: set = set()
+        self._blocked: Dict[int, Task] = {}
+        if steal_impl not in ("tiered", "scan"):
+            raise ValueError(f"unknown steal_impl {steal_impl!r}")
+        self._steal = (self._steal_tiered if steal_impl == "tiered"
+                       else self._steal_scan)
         self._rng = random.Random(seed)
         self._rr = 0
+        self.rounds = 0
         self.steal_log: List[Dict] = []
+
+    # -- occupancy bookkeeping (called by Worker on transitions) -----------
+    def _mark_nonempty(self, w: Worker):
+        self._ne_group[w.group].add(w.wid)
+        self._ne_pod[w.pod].add(w.wid)
+        self._ne_all.add(w.wid)
+
+    def _mark_empty(self, w: Worker):
+        self._ne_group[w.group].discard(w.wid)
+        self._ne_pod[w.pod].discard(w.wid)
+        self._ne_all.discard(w.wid)
+
+    def pending(self) -> bool:
+        """Any runnable (non-blocked) work queued anywhere?"""
+        return bool(self._ne_all)
+
+    def blocked(self) -> List[Task]:
+        return list(self._blocked.values())
 
     # ------------------------------------------------------------------
     def spawn(self, gen: Generator, *, group: Optional[int] = None,
-              name: str = "") -> Task:
-        task = Task(gen, group=group, name=name)
-        w = self._home_worker(task)
+              name: str = "", priority: int = 0,
+              worker: Optional[int] = None) -> Task:
+        task = Task(gen, group=group, name=name, priority=priority)
+        w = (self.workers[worker] if worker is not None
+             else self._home_worker(task))
         w.push(task)
         self.counters.add("tasks_spawned", 1)
         return task
 
     def _home_worker(self, task: Task) -> Worker:
         if task.group is not None:
-            cands = [w for w in self.workers if w.group == task.group]
-            if cands:
-                return min(cands, key=lambda w: len(w.deque))
+            members = self._group_members.get(task.group)
+            if members:
+                return min((self.workers[i] for i in members),
+                           key=lambda w: (len(w), w.wid))
         self._rr = (self._rr + 1) % len(self.workers)
         return self.workers[self._rr]
 
+    def unblock(self, task: Task):
+        """Re-enqueue a task previously parked via ``yield BLOCK``."""
+        t = self._blocked.pop(task.id, None)
+        if t is None or t.done:
+            return
+        t.state = "ready"
+        self.counters.add("tasks_unblocked", 1)
+        self._home_worker(t).push(t)
+
     # -- §4.4 steal order: same group, then same pod, then anywhere --------
-    def _steal(self, thief: Worker) -> Optional[Task]:
+    def _steal_tiered(self, thief: Worker) -> Optional[Task]:
+        """Occupancy-indexed steal: cost scales with the number of workers
+        that *have* work, not the fleet size."""
+        g_ne = self._ne_group.get(thief.group, _EMPTY)
+        cands: Any = g_ne - {thief.wid} if g_ne else _EMPTY
+        tier = "group"
+        if not cands:
+            p_ne = self._ne_pod.get(thief.pod, _EMPTY)
+            cands, tier = p_ne - g_ne if p_ne else _EMPTY, "pod"
+        if not cands:
+            p_ne = self._ne_pod.get(thief.pod, _EMPTY)
+            cands, tier = self._ne_all - p_ne, "fleet"
+        if not cands:
+            return None
+        victim = self.workers[self._rng.choice(sorted(cands))]
+        return self._finish_steal(thief, victim, tier)
+
+    def _steal_scan(self, thief: Worker) -> Optional[Task]:
+        """The seed's scan-based steal (O(W) per idle call) — kept as the
+        baseline for benchmarks/sched_micro.py."""
         tiers = (
             [w for w in self.workers
              if w is not thief and w.group == thief.group],
@@ -127,49 +265,66 @@ class TaskRuntime:
             [w for w in self.workers if w.pod != thief.pod],
         )
         for tier_name, tier in zip(("group", "pod", "fleet"), tiers):
-            victims = [w for w in tier if w.deque]
+            victims = [w for w in tier if len(w)]
             if victims:
                 victim = self._rng.choice(victims)
-                task = victim.steal_from()
-                if task is not None:
-                    thief.stolen += 1
-                    task.stats.steals += 1
-                    self.counters.add(f"steals_{tier_name}", 1)
-                    # cross-group steal = remote traffic (counter feed)
-                    if tier_name != "group":
-                        self.counters.add("remote_bytes", 1.0)
-                    self.steal_log.append(
-                        {"thief": thief.wid, "victim": victim.wid,
-                         "tier": tier_name, "task": task.id})
-                    return task
+                return self._finish_steal(thief, victim, tier_name)
         return None
 
+    def _finish_steal(self, thief: Worker, victim: Worker,
+                      tier: str) -> Optional[Task]:
+        task = victim.steal_from()
+        if task is None:
+            return None
+        thief.stolen += 1
+        task.stats.steals += 1
+        self.counters.add(f"steals_{tier}", 1)
+        # cross-group steal = remote traffic (counter feed for Algorithm 1)
+        if tier != "group":
+            self.counters.add("remote_bytes", 1.0)
+        self.steal_log.append(
+            {"thief": thief.wid, "victim": victim.wid,
+             "tier": tier, "task": task.id})
+        return task
+
     # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """One cooperative round over all workers (a yield-point boundary
+        for every running task).  Returns the number of tasks advanced."""
+        active = 0
+        for w in self.workers:
+            task = w.pop_local() or self._steal(w)
+            if task is None:
+                continue
+            active += 1
+            finished = task.step()
+            w.executed_steps += 1
+            if self.profile_hook is not None:
+                self.profile_hook(task)           # yield-point profiling
+            if finished:
+                continue
+            if task.last_yield is BLOCK:
+                task.state = "blocked"
+                self._blocked[task.id] = task
+                self.counters.add("tasks_blocked", 1)
+            else:
+                w.push(task)
+        self.rounds += 1
+        return active
+
     def run(self, *, max_rounds: int = 10_000_000,
-            concurrency_trace: Optional[List[int]] = None) -> None:
-        """Drive all tasks to completion (cooperative round-robin)."""
-        pending = True
+            concurrency_trace: Optional[List[int]] = None) -> int:
+        """Drive all runnable tasks to completion; returns rounds used.
+        Tasks parked via BLOCK stay parked (see ``unblock``)."""
         rounds = 0
-        while pending and rounds < max_rounds:
-            pending = False
+        while self.pending() and rounds < max_rounds:
+            active = self.tick()
             rounds += 1
-            active = 0
-            for w in self.workers:
-                task = w.pop_local() or self._steal(w)
-                if task is None:
-                    continue
-                active += 1
-                pending = True
-                finished = task.step()
-                w.executed_steps += 1
-                if self.profile_hook is not None:
-                    self.profile_hook(task)           # yield-point profiling
-                if not finished:
-                    w.push(task)
             if concurrency_trace is not None:
                 concurrency_trace.append(active)
-        if pending:
+        if self.pending():
             raise RuntimeError("TaskRuntime.run exceeded max_rounds")
+        return rounds
 
     def barrier(self):
         """Paper API: run everything currently queued to completion."""

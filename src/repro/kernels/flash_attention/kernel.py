@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -137,7 +139,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
@@ -266,7 +268,7 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=0,
         out_specs=pl.BlockSpec((1, bq, dh), lambda b, iq, jk: (b, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, do, lse, delta)
@@ -296,7 +298,7 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=0,
             pltpu.VMEM((bkv, dh), jnp.float32),
             pltpu.VMEM((bkv, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary",
                                  "arbitrary")),
         interpret=interpret,

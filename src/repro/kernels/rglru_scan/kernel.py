@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _chunk_scan(a, b):
     """Doubling scan within a chunk.  a, b: (bs, bw) -> h (bs, bw).
@@ -70,7 +72,7 @@ def lru_scan(a, b, *, block_s=256, block_w=512, interpret=True):
         out_specs=pl.BlockSpec((1, bs, bw), lambda ib, iw, js: (ib, js, iw)),
         out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

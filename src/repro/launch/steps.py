@@ -21,13 +21,18 @@ from repro.optim.quantized import adamw8bit_update
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                     grad_transform=None, microbatches: int = 1,
-                    opt_impl: str = "adamw", gather_specs=None):
+                    opt_impl: str = "adamw", gather_specs=None,
+                    ef_transform=None):
     """(params, opt_state, batch) -> (params', opt_state', metrics).
 
     ``microbatches > 1`` splits the global batch and accumulates gradients
     in f32 over a scan — activation memory scales with the microbatch while
     the optimizer still sees the full-batch gradient.  ``grad_transform``
-    hooks in cross-pod gradient compression (repro.compression).
+    hooks in a stateless gradient transform.  ``ef_transform`` hooks in
+    *stateful* cross-pod gradient compression (repro.compression): the step
+    becomes (params, opt_state, batch, ef) -> (params', opt_state',
+    metrics, ef') so the error-feedback state threads through the jit
+    instead of being baked in as a traced constant.
     """
 
     def grads_of(params, batch):
@@ -35,7 +40,7 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
             lambda p: T.loss_fn(p, cfg, batch, gather_specs=gather_specs),
             has_aux=True)(params)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, ef=None):
         if microbatches == 1:
             (loss, parts), grads = grads_of(params, batch)
         else:
@@ -75,12 +80,23 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
             loss = lsum / m
             parts = {"ce": csum / m, "aux": asum / m}
 
-        if grad_transform is not None:
+        new_ef = ef
+        if ef_transform is not None:
+            grads, new_ef = ef_transform(grads, ef)
+        elif grad_transform is not None:
             grads = grad_transform(grads)
         update = adamw8bit_update if opt_impl == "adamw8bit" else adamw_update
         new_params, new_opt, om = update(grads, opt_state, params, opt_cfg)
         metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"], **om}
+        if ef_transform is not None:
+            return new_params, new_opt, metrics, new_ef
         return new_params, new_opt, metrics
+
+    if ef_transform is None:
+        # keep the legacy 3-arg signature for stateless callers
+        stateless = train_step
+        def train_step(params, opt_state, batch):   # noqa: F811
+            return stateless(params, opt_state, batch)
 
     return train_step
 

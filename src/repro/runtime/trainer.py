@@ -24,7 +24,7 @@ from repro.compression.grad_compress import (init_compression,
 from repro.core.controller import ControllerConfig
 from repro.core.counters import PerfCounters
 from repro.core.layout import Layout
-from repro.core.scheduler import GlobalScheduler
+from repro.core.scheduler import GlobalScheduler, migrate_pytree
 from repro.core.topology import ChipletTopology
 from repro.launch import sharding as shlib
 from repro.launch import hlo_analysis as ha
@@ -69,6 +69,7 @@ class Trainer:
         if tcfg.arcas and topology is not None:
             self.scheduler = GlobalScheduler(
                 topology, controller_cfg, counters=self.counters)
+            self.scheduler.register_relayout(self._on_relayout)
         self.step = 0
         self._build()
 
@@ -86,23 +87,61 @@ class Trainer:
         self.osh = shlib.named(mesh, ospecs)
         self.opt_state = jax.device_put(self.opt_state, self.osh)
 
-        transform = None
-        if self.tcfg.compress_cross_pod:
+        if self.tcfg.compress_cross_pod and not hasattr(self, "_ef"):
             self._ef = init_compression(self.params)["ef"]
+        self._compile_step(mesh)
 
-            def transform(grads):
-                g, self._ef_new = int8_compress_transform(grads, self._ef)
-                return g
+    def _compile_step(self, mesh):
+        """(Re-)jit the train step for ``mesh`` (initial build + relayout).
 
-        step_fn = make_train_step(cfg, self.tcfg.opt,
-                                  grad_transform=transform,
-                                  microbatches=self.tcfg.microbatches)
-        self._jit_step = jax.jit(
-            step_fn, out_shardings=(self.psh, self.osh, None),
-            donate_argnums=(0, 1))
+        With compression on, the error-feedback state threads through the
+        jitted step as an explicit carry (in/out), so it actually updates
+        every step instead of being baked in as a traced constant.
+        """
+        compress = self.tcfg.compress_cross_pod
+        step_fn = make_train_step(
+            self.cfg, self.tcfg.opt,
+            ef_transform=int8_compress_transform if compress else None,
+            microbatches=self.tcfg.microbatches)
+        if compress:
+            self._jit_step = jax.jit(
+                step_fn, out_shardings=(self.psh, self.osh, None, None),
+                donate_argnums=(0, 1, 3))
+        else:
+            self._jit_step = jax.jit(
+                step_fn, out_shardings=(self.psh, self.osh, None),
+                donate_argnums=(0, 1))
         self._batch_sharding = shlib.named(
-            mesh, shlib.batch_specs(cfg, None, mesh))
-        self._hlo_bytes = None  # filled after first compile
+            mesh, shlib.batch_specs(self.cfg, None, mesh))
+        self._hlo_bytes = None  # (re-)filled after next compile
+
+    # -- relayout handler: migrate live training state to the new layout ----
+    def _on_relayout(self, new_layout: Layout, decision) -> None:
+        """Invoked by the GlobalScheduler control loop on a spread change.
+
+        With a full fleet attached this rebuilds the mesh and reshards the
+        live params/optimizer pytrees (``migrate_pytree``); on smaller
+        hosts the relayout is logical — recorded, counters reset, but state
+        stays put.
+        """
+        self.counters.add("relayouts", 1)
+        self.log(f"[trainer] relayout s={decision.old_spread}->"
+                 f"{decision.new_spread} ({decision.reason})")
+        if len(jax.devices()) < new_layout.topology.total_chips:
+            return
+        mesh = new_layout.make_mesh()
+        self.mesh = mesh
+        self.pspecs = shlib.param_specs(self.cfg, mesh, fsdp=False)
+        self.psh = shlib.named(mesh, self.pspecs)
+        ospecs = shlib.opt_specs(self.cfg, mesh, self.pspecs)
+        self.osh = shlib.named(mesh, ospecs)
+        self.params = migrate_pytree(self.params, self.psh)
+        self.opt_state = migrate_pytree(self.opt_state, self.osh)
+        if hasattr(self, "_ef"):
+            # error-feedback state mirrors params; the re-jitted step
+            # captures it, so it must move to the new mesh too
+            self._ef = migrate_pytree(self._ef, self.psh)
+        self._compile_step(mesh)
 
     def _put_batch(self, np_batch: Dict[str, np.ndarray]):
         out = {}
@@ -146,8 +185,13 @@ class Trainer:
             from repro.data.pipeline import make_batch
             batch = self._put_batch(make_batch(self.cfg, block))
             t0 = time.monotonic()
-            self.params, self.opt_state, metrics = self._jit_step(
-                self.params, self.opt_state, batch)
+            if self.tcfg.compress_cross_pod:
+                self.params, self.opt_state, metrics, self._ef = \
+                    self._jit_step(self.params, self.opt_state, batch,
+                                   self._ef)
+            else:
+                self.params, self.opt_state, metrics = self._jit_step(
+                    self.params, self.opt_state, batch)
             loss = float(metrics["loss"])
             dt = time.monotonic() - t0
             losses.append(loss)
@@ -156,8 +200,10 @@ class Trainer:
             if self._hlo_bytes is None:
                 try:
                     # pull collective constants from the compiled step once
-                    txt = self._jit_step.lower(
-                        self.params, self.opt_state, batch).compile().as_text()
+                    args = (self.params, self.opt_state, batch)
+                    if self.tcfg.compress_cross_pod:
+                        args += (self._ef,)
+                    txt = self._jit_step.lower(*args).compile().as_text()
                     self._collective_feed(txt)
                 except Exception:   # noqa: BLE001
                     self._hlo_bytes = {"remote": 0.0, "local": 0.0}
@@ -168,7 +214,9 @@ class Trainer:
                 remote_bytes=self._hlo_bytes["remote"] * (2 if slow else 1),
                 local_bytes=self._hlo_bytes["local"])
             if self.scheduler is not None:
-                self.scheduler.after_step()
+                # the unified control loop: advance host-side coroutines one
+                # round, evaluate Algorithm 1, fire relayout handlers
+                self.scheduler.tick()
 
             if self.step % self.tcfg.log_every == 0:
                 self.log(f"[trainer] step {self.step} loss {loss:.4f} "

@@ -1,37 +1,42 @@
-"""Serving engine: continuous batching over chiplet-group replicas.
+"""Serving engine: continuous batching over chiplet-group replicas, running
+on the unified GlobalScheduler substrate.
 
 ARCAS mapping (the paper's runtime, applied to inference):
   * every request is a COROUTINE (prefill step, then one yield per decode
-    step) scheduled by the §4.4 task runtime;
+    step) scheduled by the §4.4 task runtime that the GlobalScheduler owns;
   * the fleet is partitioned into replica groups by the current Layout
     (spread_rate): compact layout = many small replicas (low latency, small
     aggregate KV "cache" per replica = LocalCache), spread = few big
     replicas (large aggregate KV = DistributedCache);
-  * waiting requests are WORK-STOLEN between group queues, same-pod first;
-  * the adaptive controller watches the remote-counter analogue
-    (cross-group steals + KV-pressure overflow) and re-spreads/compacts.
+  * waiting requests are WORK-STOLEN between replica queues in §4.4 tier
+    order (own queue, then same-pod, then cross-pod) via TieredQueues;
+  * the adaptive controller runs LIVE: Algorithm 1 is evaluated at
+    yield-point boundaries by GlobalScheduler.tick, and on a spread-rate
+    change the engine's RelayoutHandler merges/splits replica groups
+    MID-RUN — in-flight KV-cache slots, positions and next tokens migrate
+    to the new groups and queued requests are redistributed, so adaptive
+    and non-adaptive runs generate identical tokens.
 
 On this CPU container the model compute is real (tiny configs) while the
 replica groups are logical queues over the same device — the scheduling,
-batching, stealing and controller behavior is exactly the code a TPU
-deployment would run host-side.
+batching, stealing, controller and migration behavior is exactly the code a
+TPU deployment would run host-side.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.controller import AdaptiveController, ControllerConfig
-from repro.core.counters import PerfCounters
+from repro.core.controller import ControllerConfig, Decision
 from repro.core.layout import Layout
-from repro.core.tasks import TaskRuntime
+from repro.core.scheduler import GlobalScheduler, TieredQueues
 from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
@@ -48,10 +53,15 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    migrations: int = 0                 # relayouts survived while in flight
 
     @property
     def done(self) -> bool:
         return self.t_done is not None
+
+    def kv_bytes(self) -> float:
+        """Rough KV footprint moved when this request changes groups."""
+        return float((len(self.prompt) + len(self.generated)) * 2)
 
 
 @dataclasses.dataclass
@@ -64,23 +74,46 @@ class EngineConfig:
             scheduler_timer=8, threshold=4.0, min_dwell=2))
 
 
-class _Group:
-    """One replica group: decode slots + its own cache pool."""
+@dataclasses.dataclass
+class _InFlight:
+    """A mid-generation stream harvested from a retired replica group."""
+    req: Request
+    cache: Any                          # per-stream cache slice (axis-1 cut)
+    pos: int
+    token: int
 
-    def __init__(self, gid: int, cfg: ModelConfig, params, ecfg: EngineConfig):
+
+class _Group:
+    """One replica group: decode slots + its own cache pool.
+
+    ``queue`` is the group's deque inside the engine's TieredQueues;
+    ``resume`` holds migrated in-flight streams awaiting a free slot;
+    ``retired`` marks groups dissolved by a relayout (their coroutine exits
+    at its next yield point).
+    """
+
+    def __init__(self, gid: int, pod: int, cfg: ModelConfig, params,
+                 ecfg: EngineConfig, queue):
         self.gid = gid
+        self.pod = pod
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
+        self.queue = queue
+        self.resume: List[_InFlight] = []
+        self.retired = False
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.cache = dec.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
         self.pos = jnp.zeros((ecfg.max_batch,), jnp.int32)
         self.tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
-        self.queue: List[Request] = []
         self.steps = 0
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
+
+    def busy(self) -> bool:
+        return (bool(self.queue) or bool(self.resume)
+                or any(s is not None for s in self.slots))
 
     def kv_pressure(self) -> float:
         used = sum(1 for s in self.slots if s is not None)
@@ -94,27 +127,33 @@ class ServeEngine:
         self.cfg = cfg
         self.topology = topology
         self.ecfg = ecfg
-        self.counters = PerfCounters()
-        self.runtime = TaskRuntime(
-            n_pods=topology.n_pods, groups_per_pod=topology.groups_per_pod,
-            counters=self.counters)
-        self.controller = AdaptiveController(
-            topology, ecfg.controller, spread_rate=spread_rate)
+        self.sched = GlobalScheduler(
+            topology, ecfg.controller, spread_rate=spread_rate,
+            control_enabled=ecfg.adaptive)
+        # compat aliases: the scheduler owns these now
+        self.counters = self.sched.counters
+        self.controller = self.sched.controller
+        self.runtime = self.sched.tasks
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self._prefill = jax.jit(make_prefill(cfg, max_len=ecfg.max_len))
         self._decode = jax.jit(make_serve_step(cfg))
         self._rid = itertools.count()
         self._clock = time.monotonic
+        self._running = False
+        self.relayouts: List[Dict] = []
         self._build_groups()
-        self.trace: List[Dict] = []
+        self.sched.register_relayout(self._relayout)
 
     # ------------------------------------------------------------------
-    def _n_groups(self) -> int:
-        return self.controller.layout().replicas
-
     def _build_groups(self):
-        self.groups = [_Group(g, self.cfg, self.params, self.ecfg)
-                       for g in range(self._n_groups())]
+        lay = self.sched.layout()
+        rpp = lay.replicas_per_pod
+        pods = [g // rpp for g in range(lay.replicas)]
+        self.queues = TieredQueues(pods, counters=self.counters,
+                                   bytes_fn=Request.kv_bytes)
+        self.groups = [_Group(g, pods[g], self.cfg, self.params, self.ecfg,
+                              self.queues.queue(g))
+                       for g in range(lay.replicas)]
 
     def submit(self, prompt: np.ndarray, max_new: int) -> Request:
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new,
@@ -122,40 +161,81 @@ class ServeEngine:
         # route to least-pressured group (global scheduler placement)
         g = min(self.groups, key=lambda gr: (gr.kv_pressure(), len(gr.queue)))
         req.group = g.gid
-        g.queue.append(req)
+        self.queues.push(g.gid, req)
         return req
 
-    # -- chiplet-first stealing of queued requests ---------------------------
-    def _steal_for(self, g: "_Group") -> Optional[Request]:
-        donors = sorted((o for o in self.groups
-                         if o is not g and o.queue),
-                        key=lambda o: -len(o.queue))
-        if not donors:
-            return None
-        victim = donors[0]
-        req = victim.queue.pop(0)
-        self.counters.add("remote_bytes",
-                          float(len(req.prompt) * 2))   # moved KV bytes
-        self.counters.add("steals_group", 1)
-        req.group = g.gid
-        return req
+    # -- live relayout: merge/split replica groups mid-run -------------------
+    def _relayout(self, new_layout: Layout, decision: Decision):
+        old_groups = self.groups
+        if new_layout.replicas == len(old_groups):
+            return
+        # harvest in-flight streams (KV slot + position + next token) and
+        # queued requests from the dissolving groups
+        inflight: List[_InFlight] = []
+        queued: List[Request] = []
+        for g in old_groups:
+            g.retired = True
+            for slot, req in enumerate(g.slots):
+                if req is None:
+                    continue
+                one = jax.tree.map(lambda p: p[:, slot], g.cache)
+                inflight.append(_InFlight(req, one, int(g.pos[slot]),
+                                          int(g.tokens[slot, 0])))
+                g.slots[slot] = None
+                # counted per slot-harvest so each migration pairs with
+                # exactly one restore; resume-backlog streams below were
+                # already counted on their first hop
+                self.counters.add("kv_slots_migrated", 1)
+                self.counters.add("migration_bytes", req.kv_bytes())
+            inflight.extend(g.resume)
+            g.resume = []
+            while g.queue:
+                queued.append(g.queue.popleft())
+        self._build_groups()
+        n = len(self.groups)
+        for i, fl in enumerate(inflight):
+            tgt = self.groups[i % n]
+            fl.req.group = tgt.gid
+            fl.req.migrations += 1
+            tgt.resume.append(fl)
+        for i, req in enumerate(queued):
+            tgt = self.groups[i % n]
+            req.group = tgt.gid
+            self.queues.push(tgt.gid, req)
+        self.relayouts.append({
+            "step": decision.step, "old_groups": len(old_groups),
+            "new_groups": n, "moved_slots": len(inflight),
+            "requeued": len(queued), "reason": decision.reason})
+        if self._running:
+            for g in self.groups:
+                self._spawn_group(g)
 
     # -- one engine tick: admit + prefill + batched decode --------------------
-    def _admit(self, g: "_Group"):
+    def _install(self, g: _Group, slot: int, fl: _InFlight):
+        """Write a migrated stream's KV state into a free slot."""
+        g.cache = jax.tree.map(lambda pool, one: pool.at[:, slot].set(one),
+                               g.cache, fl.cache)
+        g.slots[slot] = fl.req
+        g.pos = g.pos.at[slot].set(fl.pos)
+        g.tokens = g.tokens.at[slot, 0].set(fl.token)
+        self.counters.add("kv_slots_restored", 1)
+
+    def _admit(self, g: _Group):
         for slot in g.free_slots():
-            req = g.queue.pop(0) if g.queue else self._steal_for(g)
+            if g.resume:                       # migrated streams first
+                self._install(g, slot, g.resume.pop(0))
+                continue
+            req, tier = self.queues.pop(g.gid)
             if req is None:
                 break
+            if tier != "local":
+                req.group = g.gid
             prompt = req.prompt[None, :]
             logits, cache1 = self._prefill(self.params, {"tokens": prompt})
             nxt = int(jnp.argmax(logits[0]))
             req.generated.append(nxt)
             req.t_first = self._clock()
-            # copy single-stream cache into the group slot
-            def write(pool, one):
-                return jax.tree.map(
-                    lambda p, o: p.at[:, slot].set(o[:, 0]) if p.ndim >= 2
-                    else p, pool, one)
+            # copy the single-stream cache into the group slot
             g.cache = jax.tree.map(
                 lambda pool, one: pool.at[:, slot].set(one[:, 0]),
                 g.cache, cache1)
@@ -164,7 +244,7 @@ class ServeEngine:
             g.tokens = g.tokens.at[slot, 0].set(nxt)
             self.counters.add("prefills", 1)
 
-    def _decode_tick(self, g: "_Group"):
+    def _decode_tick(self, g: _Group):
         if not any(s is not None for s in g.slots):
             return
         logits, g.cache = self._decode(self.params, g.cache, g.tokens, g.pos)
@@ -186,27 +266,32 @@ class ServeEngine:
                           sum(1 for s in g.slots if s is not None))
 
     # -- engine task (coroutine per group, scheduled by the task runtime) ----
-    def _group_task(self, g: "_Group"):
-        while True:
-            busy = bool(g.queue) or any(s is not None for s in g.slots)
-            others_waiting = any(o.queue for o in self.groups)
-            if not busy and not others_waiting:
+    def _group_task(self, g: _Group):
+        while not g.retired:
+            others_waiting = (self.queues.pending()
+                              or any(o.resume for o in self.groups))
+            if not g.busy() and not others_waiting:
                 return
             self._admit(g)
             self._decode_tick(g)
-            yield   # yield point: profiler + possible migration
+            yield   # yield point: profiler + Algorithm 1 + possible relayout
+
+    def _spawn_group(self, g: _Group):
+        self.sched.spawn(self._group_task(g), group=g.gid,
+                         name=f"group{g.gid}")
 
     def run_until_done(self, *, max_rounds: int = 100000) -> Dict:
         trace: List[int] = []
-        for g in self.groups:
-            self.runtime.spawn(self._group_task(g), group=g.gid,
-                               name=f"group{g.gid}")
-        self.runtime.run(concurrency_trace=trace, max_rounds=max_rounds)
-        if self.ecfg.adaptive:
-            d = self.controller.maybe_reschedule(self.counters)
-            if d is not None:
-                self.trace.append(dataclasses.asdict(d))
+        self._running = True
+        try:
+            for g in self.groups:
+                self._spawn_group(g)
+            self.sched.run_until_done(max_rounds=max_rounds,
+                                      concurrency_trace=trace)
+        finally:
+            self._running = False
         return {"concurrency": trace, "counters": self.counters.snapshot(),
+                "relayouts": list(self.relayouts),
                 "decisions": [dataclasses.asdict(x)
                               for x in self.controller.decisions]}
 

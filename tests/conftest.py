@@ -11,6 +11,31 @@ import pytest
 from repro.configs import REGISTRY, reduced_config
 
 
+def hypothesis_tools():
+    """(given, settings, st) — the real hypothesis decorators when the
+    package is installed; otherwise stand-ins that degrade each property
+    test to ``pytest.importorskip("hypothesis")`` (reported as skipped) so
+    the suite still collects."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        class _MissingStrategies:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        def _skipping_decorator(*_a, **_k):
+            def deco(fn):
+                def run(*_args, **_kwargs):
+                    pytest.importorskip("hypothesis")
+                run.__name__ = fn.__name__
+                run.__doc__ = fn.__doc__
+                return run
+            return deco
+
+        return _skipping_decorator, _skipping_decorator, _MissingStrategies()
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

@@ -2,7 +2,10 @@
 properties (hypothesis), layouts, cost model, coroutines + stealing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_tools
+
+given, settings, st = hypothesis_tools()
 
 from repro.configs import SHAPES, get_config
 from repro.core.controller import AdaptiveController, ControllerConfig
@@ -141,6 +144,40 @@ def test_capacity_guard_forces_spread():
     assert ctrl.spread_rate >= 4
 
 
+def test_min_dwell_hysteresis():
+    """min_dwell holds the layout for N intervals after every move."""
+    topo = production_topology()
+    ctrl = AdaptiveController(
+        topo, ControllerConfig(scheduler_timer=1, threshold=100.0,
+                               min_dwell=2), spread_rate=1)
+    cnt = PerfCounters()
+    spreads, moved = [], []
+    for _ in range(7):
+        cnt.add("remote_bytes", 500)           # constant high pressure
+        d = ctrl.maybe_reschedule(cnt)
+        spreads.append(ctrl.spread_rate)
+        moved.append(d is not None)
+    # a move lands, then two dwell intervals suppress further moves
+    assert spreads == [2, 2, 2, 4, 4, 4, 8]
+    assert moved == [True, False, False, True, False, False, True]
+
+
+def test_capacity_guard_blocks_compaction():
+    """working_set_fn keeps the controller from compacting below fit."""
+    topo = production_topology()
+    ws = 700e9                                  # needs spread_rate >= 4
+    ctrl = AdaptiveController(
+        topo, ControllerConfig(scheduler_timer=1, threshold=100.0,
+                               min_dwell=0),
+        spread_rate=4, working_set_fn=lambda: ws)
+    cnt = PerfCounters()
+    for _ in range(3):
+        cnt.add("remote_bytes", 1)              # low rate: wants compact
+        assert ctrl.maybe_reschedule(cnt) is None
+        assert ctrl.spread_rate == 4            # guard pinned the layout
+    assert Layout(topo, ctrl.spread_rate).fits(ws)
+
+
 def test_model_guided_picks_feasible_min():
     topo = production_topology()
     cfg = get_config("qwen2-vl-2b")
@@ -213,6 +250,85 @@ def test_tasks_complete_and_yield_counts():
     rt.barrier()
     assert sorted(done) == list(range(20))
     assert all(t.stats.yields >= 1 for t in tasks)
+
+
+def test_steal_tier_preference_order():
+    """First steals follow §4.4: group before pod before fleet."""
+    rt = TaskRuntime(n_pods=2, groups_per_pod=2, workers_per_group=2, seed=0)
+
+    def work():
+        for _ in range(40):
+            yield
+
+    for _ in range(16):
+        rt.spawn(work(), worker=0)    # all work on worker 0 (group 0, pod 0)
+    rt.tick()
+    first_tier = {}
+    for e in rt.steal_log:
+        first_tier.setdefault(e["thief"], e["tier"])
+    assert first_tier[1] == "group"   # same-group peer steals locally
+    assert first_tier[2] == "pod"     # same pod, different group
+    assert first_tier[4] == "fleet"   # other pod: last resort
+    snap = rt.counters.totals
+    assert snap["steals_group"] >= 1
+    assert snap["steals_pod"] >= 1
+    assert snap["steals_fleet"] >= 1
+
+
+def test_tiered_steal_matches_scan_semantics():
+    """Both steal implementations drain identical workloads completely."""
+    def build(impl):
+        rt = TaskRuntime(n_pods=2, groups_per_pod=2, seed=5, steal_impl=impl)
+        done = []
+
+        def job(i):
+            for _ in range(i % 4 + 1):
+                yield
+            done.append(i)
+
+        for i in range(30):
+            rt.spawn(job(i), group=i % 3)
+        rt.run()
+        return sorted(done)
+
+    assert build("tiered") == build("scan") == list(range(30))
+
+
+def test_tick_block_unblock():
+    from repro.core.tasks import BLOCK
+    rt = TaskRuntime(n_pods=1, groups_per_pod=2)
+    log = []
+
+    def producer():
+        log.append("p1")
+        yield BLOCK                   # park until unblocked
+        log.append("p2")
+        yield
+
+    t = rt.spawn(producer())
+    rt.tick()
+    assert t.state == "blocked" and log == ["p1"]
+    assert not rt.pending()           # blocked tasks are not runnable
+    rt.tick()
+    assert log == ["p1"]              # parked tasks never advance
+    rt.unblock(t)
+    assert rt.pending()
+    rt.run()
+    assert t.done and log == ["p1", "p2"]
+
+
+def test_task_priority_runs_first():
+    rt = TaskRuntime(n_pods=1, groups_per_pod=1)
+    order = []
+
+    def job(tag):
+        order.append(tag)
+        yield
+
+    rt.spawn(job("lo"), priority=0, worker=0)
+    rt.spawn(job("hi"), priority=5, worker=0)
+    rt.run()
+    assert order == ["hi", "lo"]
 
 
 def test_topology_latency_classes():

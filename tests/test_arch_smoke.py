@@ -114,13 +114,15 @@ def test_decode_matches_forward(arch_cfg, key):
         fwd = lambda t: T.forward(prm, cfg, t, extras)[0]
 
     ref_last = T.head_logits(prm, cfg, fwd(text)[:, -1])
-    lp, cache = Dec.prefill(prm, cfg, text, extras, max_len=text.shape[1] + 8)
+    # processed length = vision + text for VLM; the cache must cover it all
+    # plus decode headroom, or the ring evicts vision tokens the teacher-
+    # forced reference still attends to
+    seq_done = S if cfg.family == "vlm" else text.shape[1]
+    lp, cache = Dec.prefill(prm, cfg, text, extras, max_len=seq_done + 8)
     np.testing.assert_allclose(np.asarray(lp), np.asarray(ref_last),
                                rtol=3e-4, atol=3e-4)
 
     nxt = jnp.argmax(lp, -1)[:, None].astype(jnp.int32)
-    # decode position = full processed length (vision + text for VLM)
-    seq_done = S if cfg.family == "vlm" else text.shape[1]
     pos = jnp.full((B,), seq_done, jnp.int32)
     dext = None
     if cfg.family == "vlm":

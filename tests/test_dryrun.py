@@ -69,8 +69,9 @@ def test_nested_while_trip_counts_subprocess():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import collective_bytes
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        at = getattr(jax.sharding, "AxisType", None)
+        kw = {"axis_types": (at.Auto,)*2} if at is not None else {}
+        mesh = jax.make_mesh((4, 2), ("data", "model"), **kw)
         W = jax.ShapeDtypeStruct((64, 64), jnp.float32,
                                  sharding=NamedSharding(mesh, P(None, "model")))
         x = jax.ShapeDtypeStruct((8, 64), jnp.float32,

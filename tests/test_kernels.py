@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_tools
+
+given, settings, st = hypothesis_tools()
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import gqa_attention_ref

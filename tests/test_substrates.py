@@ -285,6 +285,71 @@ def test_serving_batched_equals_single():
     assert run(0) == run(3)
 
 
+def test_serving_midrun_relayout_preserves_tokens():
+    """The headline adaptive behavior (ISSUE 1 acceptance): under uneven
+    load the controller changes spread_rate DURING run_until_done, replica
+    groups are rebuilt, in-flight KV slots survive migration, and every
+    request generates exactly the tokens of a non-adaptive run."""
+    from repro.core.controller import ControllerConfig
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, cfg.vocab, size=6) for _ in range(12)]
+    # round-robin routing puts every 4th request on group 0; its short
+    # generations drain first, so group 0 steals early and remote_bytes
+    # crosses the threshold while other groups still hold KV state
+    max_new = [2 if i % 4 == 0 else 10 for i in range(12)]
+
+    def run(adaptive):
+        ecfg = EngineConfig(
+            max_batch=1, max_len=32, adaptive=adaptive,
+            controller=ControllerConfig(scheduler_timer=3, threshold=1.0,
+                                        min_dwell=1))
+        eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=0)
+        reqs = [eng.submit(p, max_new=max_new[i])
+                for i, p in enumerate(prompts)]
+        res = eng.run_until_done()
+        return eng, reqs, res
+
+    eng_a, reqs_a, res_a = run(True)
+    assert all(r.done for r in reqs_a)
+    # at least one relayout fired mid-run and actually changed the groups
+    assert len(res_a["relayouts"]) >= 1
+    assert res_a["relayouts"][0]["old_groups"] != \
+        res_a["relayouts"][0]["new_groups"]
+    assert len(eng_a.groups) != 4
+    # in-flight KV state survived the migration
+    assert res_a["relayouts"][0]["moved_slots"] >= 1
+    assert res_a["counters"]["kv_slots_migrated"] == \
+        res_a["counters"]["kv_slots_restored"]
+    assert sum(r.migrations for r in reqs_a) >= 1
+    # identical generations vs the non-adaptive run
+    eng_b, reqs_b, res_b = run(False)
+    assert all(r.done for r in reqs_b)
+    assert res_b["relayouts"] == [] and res_b["decisions"] == []
+    assert [r.generated for r in reqs_a] == [r.generated for r in reqs_b]
+
+
+def test_serving_request_steal_tier_order():
+    """Request stealing follows pod-before-fleet order (§4.4 for requests)."""
+    from repro.core.scheduler import TieredQueues
+    from repro.core.counters import PerfCounters
+    cnt = PerfCounters()
+    tq = TieredQueues([0, 0, 1, 1], counters=cnt, bytes_fn=lambda r: 8.0)
+    tq.push(1, "a")
+    tq.push(2, "b")
+    item, tier = tq.pop(0)
+    assert (item, tier) == ("a", "pod")       # same-pod victim preferred
+    item, tier = tq.pop(0)
+    assert (item, tier) == ("b", "fleet")     # cross-pod as last resort
+    assert tq.pop(0) == (None, None)
+    assert cnt.totals["steals_pod"] == 1
+    assert cnt.totals["steals_fleet"] == 1
+    assert cnt.totals["remote_bytes"] == 16.0
+    assert cnt.totals["dcn_bytes"] == 8.0     # only the cross-pod move
+
+
 def test_serving_work_stealing_balances():
     from repro.serving.engine import EngineConfig, ServeEngine
     cfg = reduced_config(REGISTRY["mamba2-780m"])
