@@ -29,6 +29,12 @@ class StepSample:
     remote_bytes: float
     dcn_bytes: float
     flops: float
+    # KV block-pool health (serving): fraction of pool blocks in use, parks
+    # (allocation failures) since the previous sample, and blocks copied
+    # between chiplet-group domains since the previous sample.
+    kv_occupancy: float = 0.0
+    kv_parks: float = 0.0
+    kv_blocks_migrated: float = 0.0
 
 
 class PerfCounters:
@@ -47,16 +53,24 @@ class PerfCounters:
     def add(self, name: str, value: float):
         self.totals[name] += value
 
+    def set(self, name: str, value: float):
+        """Gauge semantics: overwrite instead of accumulate (e.g. pool
+        occupancy)."""
+        self.totals[name] = value
+
     def record_step(self, *, step_time: float, local_bytes: float = 0.0,
                     remote_bytes: float = 0.0, dcn_bytes: float = 0.0,
-                    flops: float = 0.0):
+                    flops: float = 0.0, kv_occupancy: float = 0.0,
+                    kv_parks: float = 0.0, kv_blocks_migrated: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
         self.add("dcn_bytes", dcn_bytes)
         self.add("flops", flops)
         self.samples.append(StepSample(self._clock(), step_time, local_bytes,
-                                       remote_bytes, dcn_bytes, flops))
+                                       remote_bytes, dcn_bytes, flops,
+                                       kv_occupancy, kv_parks,
+                                       kv_blocks_migrated))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

@@ -98,7 +98,11 @@ class GlobalScheduler:
                 local_bytes=step_metrics.get("local_bytes", 0.0),
                 remote_bytes=step_metrics.get("remote_bytes", 0.0),
                 dcn_bytes=step_metrics.get("dcn_bytes", 0.0),
-                flops=step_metrics.get("flops", 0.0))
+                flops=step_metrics.get("flops", 0.0),
+                kv_occupancy=step_metrics.get("kv_occupancy", 0.0),
+                kv_parks=step_metrics.get("kv_parks", 0.0),
+                kv_blocks_migrated=step_metrics.get("kv_blocks_migrated",
+                                                    0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()
@@ -117,16 +121,20 @@ class GlobalScheduler:
         return decision
 
     def run_until_done(self, *, max_rounds: int = 10_000_000,
-                       concurrency_trace: Optional[List[int]] = None) -> int:
+                       concurrency_trace: Optional[List[int]] = None,
+                       metrics_fn: Optional[Callable[[], Dict[str, float]]]
+                       = None) -> int:
         """Tick until the task runtime drains; returns rounds used.
 
         Unlike ``TaskRuntime.run``, the controller fires *during* the run,
         so relayout handlers may migrate state (and spawn replacement
-        coroutines) mid-flight.
+        coroutines) mid-flight.  ``metrics_fn`` — when given — supplies the
+        per-round ``step_metrics`` dict fed to the profiler (e.g. the
+        serving engine's KV-pool gauges).
         """
         rounds = 0
         while self.tasks.pending() and rounds < max_rounds:
-            self.tick()
+            self.tick(step_metrics=metrics_fn() if metrics_fn else None)
             if concurrency_trace is not None:
                 concurrency_trace.append(self.last_active)
             rounds += 1
@@ -157,13 +165,21 @@ class TieredQueues:
     Queue ``i`` belongs to pod ``pods[i]`` (for serving: one queue per
     replica group, pod derived from the Layout).  ``pop(i)`` drains the
     local queue first; otherwise it steals the oldest item from the fullest
-    same-pod queue, then cross-pod — counting ``steals_pod`` /
-    ``steals_fleet`` and feeding ``remote_bytes`` (plus ``dcn_bytes`` for
-    cross-pod moves) so Algorithm 1 sees request migration traffic exactly
-    like coroutine-steal traffic.
+    victim queue, walking the tiers outward — counting ``steals_<tier>`` and
+    feeding ``remote_bytes`` (plus ``dcn_bytes`` for cross-pod moves) so
+    Algorithm 1 sees request migration traffic exactly like coroutine-steal
+    traffic.
+
+    With ``neighborhoods`` given (one id per queue), queues sharing a
+    neighborhood form a third, cheaper *group* tier searched before the pod
+    tier — replicas whose chiplet-group spans are 1-hop ICI neighbors (used
+    by the engine when ``spread_rate < groups_per_pod``).  Steal order is
+    then: own queue -> same neighborhood ("group") -> same pod ("pod") ->
+    anywhere ("fleet").
     """
 
     def __init__(self, pods: Sequence[int], *,
+                 neighborhoods: Optional[Sequence[Any]] = None,
                  counters: Optional[PerfCounters] = None,
                  bytes_fn: Optional[Callable[[Any], float]] = None):
         self._pods = list(pods)
@@ -173,12 +189,24 @@ class TieredQueues:
         by_pod: Dict[int, List[int]] = collections.defaultdict(list)
         for qid, pod in enumerate(self._pods):
             by_pod[pod].append(qid)
-        # precomputed steal tiers per queue: same-pod peers, then the rest
+        hoods = list(neighborhoods) if neighborhoods is not None else None
+        if hoods is not None and len(hoods) != len(self._pods):
+            raise ValueError("neighborhoods must give one id per queue")
+        # precomputed steal tiers per queue: neighborhood peers (optional),
+        # then remaining same-pod peers, then the rest
         self._tiers: List[Tuple[Tuple[str, List[int]], ...]] = []
         for qid, pod in enumerate(self._pods):
             same = [j for j in by_pod[pod] if j != qid]
             rest = [j for j in range(len(self._pods)) if self._pods[j] != pod]
-            self._tiers.append((("pod", same), ("fleet", rest)))
+            tiers: List[Tuple[str, List[int]]] = []
+            if hoods is not None:
+                near = [j for j in same if hoods[j] == hoods[qid]]
+                if near:
+                    tiers.append(("group", near))
+                same = [j for j in same if hoods[j] != hoods[qid]]
+            tiers.append(("pod", same))
+            tiers.append(("fleet", rest))
+            self._tiers.append(tuple(tiers))
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._qs)
@@ -193,24 +221,34 @@ class TieredQueues:
     def push(self, qid: int, item: Any):
         self._qs[qid].append(item)
 
-    def pop(self, qid: int) -> Tuple[Optional[Any], Optional[str]]:
-        """-> (item, tier) with tier in {"local", "pod", "fleet"}, or
-        (None, None) when every queue is empty."""
+    def pop(self, qid: int,
+            accept: Optional[Callable[[Any, str], bool]] = None
+            ) -> Tuple[Optional[Any], Optional[str]]:
+        """-> (item, tier) with tier in {"local", "group", "pod", "fleet"},
+        or (None, None) when no queue can serve.
+
+        ``accept(item, tier)`` — when given — is consulted before a steal is
+        committed; returning False leaves the item on its victim queue and
+        the steal uncounted (the serving engine uses this to refuse steals
+        whose KV reservation cannot move into the thief's memory domain).
+        """
         q = self._qs[qid]
         if q:
             return q.popleft(), "local"
         for tier, cand in self._tiers[qid]:
-            victims = [j for j in cand if self._qs[j]]
-            if not victims:
-                continue
-            j = max(victims, key=lambda v: len(self._qs[v]))  # balance
-            item = self._qs[j].popleft()
-            moved = float(self._bytes_fn(item))
-            self.counters.add(f"steals_{tier}", 1)
-            self.counters.add("remote_bytes", moved)
-            if tier == "fleet":
-                self.counters.add("dcn_bytes", moved)
-            return item, tier
+            victims = sorted((j for j in cand if self._qs[j]),
+                             key=lambda v: (-len(self._qs[v]), v))  # balance
+            for j in victims:
+                item = self._qs[j][0]
+                if accept is not None and not accept(item, tier):
+                    continue
+                self._qs[j].popleft()
+                moved = float(self._bytes_fn(item))
+                self.counters.add(f"steals_{tier}", 1)
+                self.counters.add("remote_bytes", moved)
+                if tier == "fleet":
+                    self.counters.add("dcn_bytes", moved)
+                return item, tier
         return None, None
 
 

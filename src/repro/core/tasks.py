@@ -148,6 +148,51 @@ class Worker:
         return self._take(newest=False)     # FIFO victim end
 
 
+class WaitQueue:
+    """Deterministic FIFO of BLOCK-parked tasks (§4.4 wakeup plumbing).
+
+    A resource owner (e.g. the serving KV block pool) parks tasks that could
+    not acquire the resource and wakes them when capacity frees up.  The
+    protocol is cooperative and race-free: the task calls ``park(self_task)``
+    and immediately ``yield BLOCK``; because the runtime is single-threaded,
+    any ``wake`` (triggered by another task's step) can only run after the
+    yield has been processed and the task really is blocked.  ``wake``
+    re-enqueues parked tasks via ``TaskRuntime.unblock`` in FIFO order.
+    """
+
+    def __init__(self, runtime: "TaskRuntime"):
+        self._rt = runtime
+        self._q: "collections.OrderedDict[int, Task]" = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def park(self, task: Task):
+        """Join the wait line (idempotent: re-parking a task already in the
+        line keeps its position, so a woken task that fails its retry and
+        parks again has not lost its turn)."""
+        self._q[task.id] = task
+
+    def remove(self, task: Task):
+        """Leave the line — called by the task itself once its resource
+        grant succeeds.  Membership until *grant* (not until wake) is what
+        keeps grants FIFO: new arrivals check ``len(queue)`` and a
+        woken-but-not-yet-granted head still counts."""
+        self._q.pop(task.id, None)
+
+    def wake(self, n: Optional[int] = None) -> int:
+        """Wake the first ``n`` parked tasks (all when n is None) without
+        removing them; returns the number woken.  Waking a task that is
+        already runnable is a no-op (``unblock`` ignores it)."""
+        woken = 0
+        for tid in list(self._q):
+            if n is not None and woken >= n:
+                break
+            self._rt.unblock(self._q[tid])
+            woken += 1
+        return woken
+
+
 class TaskRuntime:
     """Cooperative scheduler over per-group workers with locality stealing."""
 

@@ -10,7 +10,8 @@ Cache pytrees mirror the parameter stacking so layer loops are
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,162 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
                    src_len: int = 0):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, src_len))
+
+
+# ---------------------------------------------------------------------------
+# Paged cache views (the KV block pool's device-side layout)
+# ---------------------------------------------------------------------------
+#
+# A *block pool* stores the same pytree structure as ``init_cache`` but with
+# the stream axis replaced by a physical-block axis:
+#
+#   token leaves  (.., B, W, rest)  ->  (.., n_blocks, block_tokens, rest)
+#   state leaves  (.., B, rest)     ->  (.., n_states, rest)
+#
+# A stream is then a *block table* — ``W / block_tokens`` physical block ids
+# (its ring-buffer pages, in ring order) plus one state slot — and the
+# batched cache the decode step consumes is materialized by gathering the
+# active streams' tables into a (.., B, W, rest) view and scattered back
+# after the step.  Leaf classification is structural: a leaf whose shape
+# changes with ``max_len`` has a token (ring) axis; one whose shape only
+# changes with ``batch`` is per-stream state (recurrent/SSD states, enc-dec
+# cross-attention KV).
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeafSpec:
+    batch_axis: int
+    token_axis: Optional[int]       # None = per-stream state leaf
+    width: int                      # ring width at the probed max_len (tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheViewSpec:
+    """Per-leaf layout of the serving cache, in ``jax.tree`` leaf order."""
+    leaves: Tuple[CacheLeafSpec, ...]
+    treedef: Any
+    width: int                      # shared ring width of all token leaves
+
+    @property
+    def has_token_leaves(self) -> bool:
+        return any(s.token_axis is not None for s in self.leaves)
+
+
+def cache_view_specs(cfg: ModelConfig, max_len: int,
+                     src_len: int = 0) -> CacheViewSpec:
+    """Classify every cache leaf by probing ``init_cache`` shapes.
+
+    Probes with batch 1 vs 2 locate the stream axis; probes with max_len 1
+    vs 2 locate the token (ring) axis.  Token axes are required to sit
+    immediately after the stream axis (true for every family) so a gathered
+    (block, token) pair can be reshaped into the contiguous (B, W) view.
+    """
+    b1 = jax.tree.leaves(abstract_cache(cfg, 1, max_len, src_len))
+    b2 = jax.tree.leaves(abstract_cache(cfg, 2, max_len, src_len))
+    t1, tdef = jax.tree.flatten(abstract_cache(cfg, 1, 1, src_len))
+    t2 = jax.tree.leaves(abstract_cache(cfg, 1, 2, src_len))
+    specs = []
+    for lb1, lb2, lt1, lt2 in zip(b1, b2, t1, t2):
+        baxes = [i for i, (a, b) in enumerate(zip(lb1.shape, lb2.shape))
+                 if a != b]
+        assert len(baxes) == 1, f"ambiguous stream axis: {lb1.shape}"
+        taxes = [i for i, (a, b) in enumerate(zip(lt1.shape, lt2.shape))
+                 if a != b]
+        assert len(taxes) <= 1, f"ambiguous token axis: {lt1.shape}"
+        tax = taxes[0] if taxes else None
+        if tax is not None:
+            assert tax == baxes[0] + 1, \
+                f"token axis must follow stream axis: {lb1.shape}"
+        width = lb1.shape[tax] if tax is not None else 0
+        specs.append(CacheLeafSpec(baxes[0], tax, width))
+    widths = {s.width for s in specs if s.token_axis is not None}
+    assert len(widths) <= 1, f"token leaves disagree on ring width: {widths}"
+    return CacheViewSpec(tuple(specs), tdef,
+                         widths.pop() if widths else 0)
+
+
+def init_block_pool(cfg: ModelConfig, spec: CacheViewSpec, n_blocks: int,
+                    n_states: int, block_tokens: int, max_len: int,
+                    src_len: int = 0):
+    """Zeroed physical storage for ``n_blocks`` KV pages + ``n_states``
+    per-stream state slots (index 0 of each is the engine's null slot)."""
+    base = jax.tree.leaves(abstract_cache(cfg, 1, max_len, src_len))
+    out = []
+    for leaf, s in zip(base, spec.leaves):
+        if s.token_axis is not None:
+            shape = (leaf.shape[:s.batch_axis] + (n_blocks, block_tokens)
+                     + leaf.shape[s.token_axis + 1:])
+        else:
+            shape = (leaf.shape[:s.batch_axis] + (n_states,)
+                     + leaf.shape[s.batch_axis + 1:])
+        out.append(jnp.zeros(shape, leaf.dtype))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def gather_cache_view(pool, spec: CacheViewSpec, tables, state_slots):
+    """Materialize the batched cache for ``decode_step``.
+
+    tables: (B, P) int32 physical block ids (ring order, null-padded);
+    state_slots: (B,) int32 state slot ids.  Returns a cache pytree shaped
+    exactly like ``init_cache(cfg, B, max_len)``.
+    """
+    B, P = tables.shape
+    flat = tables.reshape(-1)
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        if s.token_axis is None:
+            out.append(jnp.take(leaf, state_slots, axis=ax))
+            continue
+        bt = leaf.shape[ax + 1]
+        g = jnp.take(leaf, flat, axis=ax)            # (.., B*P, bt, rest)
+        shape = leaf.shape[:ax] + (B, P * bt) + leaf.shape[ax + 2:]
+        out.append(g.reshape(shape))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def scatter_cache_view(pool, spec: CacheViewSpec, tables, state_slots, view):
+    """Write a (possibly updated) batched cache view back into the pool.
+
+    Inverse of ``gather_cache_view``: each stream's W-token ring is split
+    back into P pages and written to its table's physical blocks.  Streams
+    must not share real blocks; null-padded table entries all point at the
+    engine's null block, whose contents are never read.
+    """
+    B, P = tables.shape
+    flat = tables.reshape(-1)
+    out = []
+    for leaf, vleaf, s in zip(jax.tree.leaves(pool), jax.tree.leaves(view),
+                              spec.leaves):
+        ax = s.batch_axis
+        idx = (slice(None),) * ax
+        if s.token_axis is None:
+            out.append(leaf.at[idx + (state_slots,)].set(vleaf))
+            continue
+        bt = leaf.shape[ax + 1]
+        shape = vleaf.shape[:ax] + (B * P, bt) + vleaf.shape[ax + 2:]
+        out.append(leaf.at[idx + (flat,)].set(vleaf.reshape(shape)))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def copy_pool_entries(pool, spec: CacheViewSpec, src_blocks, dst_blocks,
+                      src_state=None, dst_state=None):
+    """Copy physical pages (and optionally a state slot) inside the pool —
+    the device-side half of a cross-domain block migration."""
+    src_b = jnp.asarray(src_blocks, jnp.int32)
+    dst_b = jnp.asarray(dst_blocks, jnp.int32)
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        idx = (slice(None),) * ax
+        if s.token_axis is not None:
+            if src_b.size:
+                vals = jnp.take(leaf, src_b, axis=ax)
+                leaf = leaf.at[idx + (dst_b,)].set(vals)
+        elif src_state is not None:
+            vals = jnp.take(leaf, jnp.asarray([src_state]), axis=ax)
+            leaf = leaf.at[idx + (jnp.asarray([dst_state]),)].set(vals)
+        out.append(leaf)
+    return jax.tree.unflatten(spec.treedef, out)
 
 
 # ---------------------------------------------------------------------------

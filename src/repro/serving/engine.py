@@ -1,33 +1,48 @@
 """Serving engine: continuous batching over chiplet-group replicas, running
-on the unified GlobalScheduler substrate.
+on the unified GlobalScheduler substrate with a paged, chiplet-aware KV
+allocator.
 
 ARCAS mapping (the paper's runtime, applied to inference):
-  * every request is a COROUTINE (prefill step, then one yield per decode
-    step) scheduled by the §4.4 task runtime that the GlobalScheduler owns;
+  * every request is a COROUTINE: an admission task that reserves KV pages
+    from its replica's chiplet-group memory domain — parking via ``yield
+    BLOCK`` when the pool is exhausted and woken by the pool's free
+    callback (allocation failure IS the back-pressure mechanism) — then one
+    batched decode step per engine round inside its group's coroutine;
+  * KV cache is PAGED (``serving/kvpool.py``): a block pool partitioned per
+    chiplet-group domain; a request holds a block table, not a slot in a
+    monolithic per-replica array, so short requests reserve only the pages
+    they need and ``max_batch`` becomes a scheduling knob instead of a
+    memory allocation;
   * the fleet is partitioned into replica groups by the current Layout
-    (spread_rate): compact layout = many small replicas (low latency, small
-    aggregate KV "cache" per replica = LocalCache), spread = few big
-    replicas (large aggregate KV = DistributedCache);
+    (spread_rate): compact = many small replicas, spread = few big ones;
+    each replica group owns ``spread_rate`` pool domains;
   * waiting requests are WORK-STOLEN between replica queues in §4.4 tier
-    order (own queue, then same-pod, then cross-pod) via TieredQueues;
-  * the adaptive controller runs LIVE: Algorithm 1 is evaluated at
-    yield-point boundaries by GlobalScheduler.tick, and on a spread-rate
-    change the engine's RelayoutHandler merges/splits replica groups
-    MID-RUN — in-flight KV-cache slots, positions and next tokens migrate
-    to the new groups and queued requests are redistributed, so adaptive
-    and non-adaptive runs generate identical tokens.
+    order (own queue -> neighborhood -> pod -> fleet) via TieredQueues; a
+    steal migrates the request's KV reservation into the thief's domain
+    (memory follows work — the NUMA-bind discipline);
+  * the adaptive controller runs LIVE: on a spread-rate change the engine's
+    RelayoutHandler rebuilds replica groups MID-RUN — in-flight streams
+    keep their pool pages and only re-point their block tables at the new
+    owner replica of their domain; streams rebalanced onto a non-owner
+    replica copy just their *used* pages between domains (never whole
+    cache slices), so adaptive and non-adaptive runs generate identical
+    tokens;
+  * an open-loop client coroutine (``open_loop_client``) shares the same
+    TaskRuntime and submits requests over time from a seeded schedule, so
+    steady-state adaptation and TTFT/TPOT tails are actually exercised.
 
 On this CPU container the model compute is real (tiny configs) while the
 replica groups are logical queues over the same device — the scheduling,
-batching, stealing, controller and migration behavior is exactly the code a
-TPU deployment would run host-side.
+batching, stealing, paging, controller and migration behavior is exactly
+the code a TPU deployment would run host-side.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +52,12 @@ from repro.configs.base import ModelConfig
 from repro.core.controller import ControllerConfig, Decision
 from repro.core.layout import Layout
 from repro.core.scheduler import GlobalScheduler, TieredQueues
+from repro.core.tasks import BLOCK, WaitQueue
 from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
 from repro.launch.steps import make_prefill, make_serve_step
+from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
 
 
 @dataclasses.dataclass
@@ -54,14 +71,22 @@ class Request:
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     migrations: int = 0                 # relayouts survived while in flight
+    table: Optional[KVTable] = None     # paged mode: KV pages + state slot
+    _kv_fn: Optional[Callable[[int], float]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
         return self.t_done is not None
 
     def kv_bytes(self) -> float:
-        """Rough KV footprint moved when this request changes groups."""
-        return float((len(self.prompt) + len(self.generated)) * 2)
+        """KV footprint moved when this request changes groups.  Exact
+        (costmodel-derived per-token bytes) when the engine installed its
+        calculator; the seed's rough 2-bytes/token estimate otherwise."""
+        tokens = len(self.prompt) + len(self.generated)
+        if self._kv_fn is not None:
+            return self._kv_fn(tokens)
+        return float(tokens * 2)
 
 
 @dataclasses.dataclass
@@ -69,6 +94,12 @@ class EngineConfig:
     max_batch: int = 8                 # decode slots per replica group
     max_len: int = 256
     adaptive: bool = True
+    paged: bool = True                 # paged KV block pool (default) vs
+                                       # the legacy slot-monolith cache
+    block_tokens: int = 16             # ring tokens per KV page
+    pool_streams: Optional[int] = None  # per-DOMAIN budget, expressed as
+                                        # full-length streams (monolith
+                                        # equivalence); default max_batch
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -76,15 +107,18 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class _InFlight:
-    """A mid-generation stream harvested from a retired replica group."""
+    """A mid-generation stream harvested from a retired replica group.
+    ``cache`` carries the KV slice only in legacy (slot-monolith) mode; in
+    paged mode the KV stays in the pool and only the table pointer moves."""
     req: Request
-    cache: Any                          # per-stream cache slice (axis-1 cut)
+    cache: Any
     pos: int
     token: int
 
 
 class _Group:
-    """One replica group: decode slots + its own cache pool.
+    """One replica group: decode slots (+ its own cache pool in legacy
+    mode; in paged mode KV lives in the engine's KVBlockPool).
 
     ``queue`` is the group's deque inside the engine's TieredQueues;
     ``resume`` holds migrated in-flight streams awaiting a free slot;
@@ -93,17 +127,19 @@ class _Group:
     """
 
     def __init__(self, gid: int, pod: int, cfg: ModelConfig, params,
-                 ecfg: EngineConfig, queue):
+                 ecfg: EngineConfig, queue, domains: List[int]):
         self.gid = gid
         self.pod = pod
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.queue = queue
+        self.domains = domains          # chiplet-group pool domains owned
         self.resume: List[_InFlight] = []
         self.retired = False
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
-        self.cache = dec.init_cache(cfg, ecfg.max_batch, ecfg.max_len)
+        self.cache = (None if ecfg.paged
+                      else dec.init_cache(cfg, ecfg.max_batch, ecfg.max_len))
         self.pos = jnp.zeros((ecfg.max_batch,), jnp.int32)
         self.tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
         self.steps = 0
@@ -140,45 +176,184 @@ class ServeEngine:
         self._rid = itertools.count()
         self._clock = time.monotonic
         self._running = False
+        self._inflight = 0              # submitted, not yet done
+        self._clients = 0               # active open-loop client coroutines
+        self.submitted: List[Request] = []
         self.relayouts: List[Dict] = []
+        self.pool: Optional[KVBlockPool] = None
+        if ecfg.paged:
+            streams = ecfg.pool_streams or ecfg.max_batch
+            budget = KVBlockPool.blocks_for_streams(
+                cfg, ecfg.max_len, streams, ecfg.block_tokens)
+            self.pool = KVBlockPool(
+                cfg, n_domains=topology.total_groups, max_len=ecfg.max_len,
+                block_tokens=ecfg.block_tokens, counters=self.counters,
+                **budget)
+            self.waiters = WaitQueue(self.runtime)
+            # wake ONE waiter per free: grants stay FIFO (a successful
+            # admission cascades the wake to the next waiter itself)
+            self.pool.on_free(lambda: self.waiters.wake(1))
+            # donate the pool storage: the scatter-back updates in place
+            # instead of copying the whole fleet's blocks every tick
+            self._paged_decode = jax.jit(self._make_paged_decode(),
+                                         donate_argnums=(1,))
+            self._commit_prefill = jax.jit(self._make_commit_prefill(),
+                                           donate_argnums=(0,))
+            ml = ecfg.max_len
+            self._kv_fn = lambda n: kv_bytes_exact(cfg, n, ml)
+        else:
+            self._kv_fn = None
         self._build_groups()
         self.sched.register_relayout(self._relayout)
 
     # ------------------------------------------------------------------
+    def _domains_of(self, gid: int, lay: Layout) -> List[int]:
+        """Chiplet-group pool domains a replica group spans (Algorithm 2's
+        contiguous-group affinity)."""
+        rpp = lay.replicas_per_pod
+        pod, local = divmod(gid, rpp)
+        s = lay.spread_rate
+        base = pod * self.topology.groups_per_pod + local * s
+        return list(range(base, base + s))
+
     def _build_groups(self):
         lay = self.sched.layout()
         rpp = lay.replicas_per_pod
         pods = [g // rpp for g in range(lay.replicas)]
-        self.queues = TieredQueues(pods, counters=self.counters,
+        # neighborhood tier: adjacent replica pairs inside a pod share
+        # 1-hop ICI spans; only meaningful when a pod holds >1 replica
+        hoods = ([(p, (g % rpp) // 2) for g, p in enumerate(pods)]
+                 if rpp > 1 else None)
+        self.queues = TieredQueues(pods, neighborhoods=hoods,
+                                   counters=self.counters,
                                    bytes_fn=Request.kv_bytes)
         self.groups = [_Group(g, pods[g], self.cfg, self.params, self.ecfg,
-                              self.queues.queue(g))
+                              self.queues.queue(g), self._domains_of(g, lay))
                        for g in range(lay.replicas)]
 
+    def _owner_group(self, domain: int) -> "_Group":
+        for g in self.groups:
+            if domain in g.domains:
+                return g
+        raise KeyError(domain)
+
+    def _domain_order(self, g: _Group) -> List[int]:
+        """A group's domains, most-capacity first (blocks are the scarce
+        resource when the model has ring pages; state slots otherwise)."""
+        assert self.pool is not None
+        return sorted(g.domains,
+                      key=lambda d: (-self.pool.free_blocks(d),
+                                     -self.pool.free_states(d), d))
+
+    def _try_admit(self, total_tokens: int
+                   ) -> Tuple[Optional["_Group"], Optional[KVTable]]:
+        """Sweep every group (least-pressured first) and every domain it
+        owns; one logical alloc failure only when the whole pool is dry."""
+        for g in sorted(self.groups, key=lambda gr: (gr.kv_pressure(),
+                                                     len(gr.queue), gr.gid)):
+            for d in self._domain_order(g):
+                table = self.pool.reserve(d, total_tokens,
+                                          count_failure=False)
+                if table is not None:
+                    return g, table
+        self.counters.add("kv_alloc_failures", 1)
+        return None, None
+
+    def _migrate_into(self, table: KVTable, g: _Group) -> bool:
+        """Move a reservation into any of the group's domains."""
+        if table.domain in g.domains:
+            return True
+        return any(self.pool.migrate(table, d) for d in self._domain_order(g))
+
+    # -- submission ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int) -> Request:
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new,
                       arrived=self._clock())
-        # route to least-pressured group (global scheduler placement)
-        g = min(self.groups, key=lambda gr: (gr.kv_pressure(), len(gr.queue)))
+        req._kv_fn = self._kv_fn
+        self._inflight += 1
+        self.submitted.append(req)
+        if not self.ecfg.paged:
+            # legacy: route straight to the least-pressured group's queue
+            g = min(self.groups,
+                    key=lambda gr: (gr.kv_pressure(), len(gr.queue)))
+            req.group = g.gid
+            self.queues.push(g.gid, req)
+            return req
+        cell: Dict[str, Any] = {}
+        cell["task"] = self.sched.spawn(
+            self._admission_task(req, cell), name=f"admit{req.rid}",
+            priority=1)
+        return req
+
+    def _admission_task(self, req: Request, cell: Dict[str, Any]):
+        """Per-request coroutine: reserve KV pages, sweeping groups by
+        pressure; park on pool exhaustion until a free wakes us.
+
+        Grants are FIFO: an arrival finding a wait line joins its back,
+        waiters stay in the line until their reservation is GRANTED, and a
+        successful admission cascades the wake to the next waiter (frees
+        wake exactly one task)."""
+        total = len(req.prompt) + req.max_new
+        if len(self.waiters):           # earlier parked admissions first
+            self.waiters.park(cell["task"])
+            yield BLOCK
+        while True:
+            g, table = self._try_admit(total)
+            if table is not None:
+                break
+            # stay in the wait line until GRANTED (not merely woken), so a
+            # new arrival can never jump a woken head whose retry is pending
+            self.waiters.park(cell["task"])
+            yield BLOCK                 # woken by KVBlockPool.free
+        self.waiters.remove(cell["task"])
+        self.waiters.wake(1)            # maybe the next waiter fits too
+        req.table = table
         req.group = g.gid
         self.queues.push(g.gid, req)
-        return req
+        return
+
+    def open_loop_client(self, schedule: Iterable[Tuple[int, np.ndarray, int]]
+                         ) -> Any:
+        """Spawn an open-loop client on the shared TaskRuntime.
+
+        ``schedule`` yields ``(gap_rounds, prompt, max_new)``: the client
+        sleeps ``gap_rounds`` engine rounds (cooperative yields), then
+        submits — arrivals over time instead of an up-front queue, so the
+        controller sees steady-state load and tail latencies are real.
+        """
+        self._clients += 1
+
+        def client():
+            try:
+                for gap, prompt, max_new in schedule:
+                    for _ in range(int(gap)):
+                        yield
+                    self.submit(prompt, max_new)
+            finally:
+                self._clients -= 1
+
+        return self.sched.spawn(client(), name="client", priority=2)
 
     # -- live relayout: merge/split replica groups mid-run -------------------
     def _relayout(self, new_layout: Layout, decision: Decision):
         old_groups = self.groups
         if new_layout.replicas == len(old_groups):
             return
-        # harvest in-flight streams (KV slot + position + next token) and
-        # queued requests from the dissolving groups
+        # harvest in-flight streams and queued requests from the dissolving
+        # groups; in paged mode KV stays in the pool (tables move, data
+        # does not — except used pages of rebalanced streams)
         inflight: List[_InFlight] = []
         queued: List[Request] = []
+        mig0 = self.counters.totals.get("kv_blocks_migrated", 0.0)
         for g in old_groups:
             g.retired = True
             for slot, req in enumerate(g.slots):
                 if req is None:
                     continue
-                one = jax.tree.map(lambda p: p[:, slot], g.cache)
+                if self.ecfg.paged:
+                    one = None
+                else:
+                    one = jax.tree.map(lambda p: p[:, slot], g.cache)
                 inflight.append(_InFlight(req, one, int(g.pos[slot]),
                                           int(g.tokens[slot, 0])))
                 g.slots[slot] = None
@@ -193,39 +368,112 @@ class ServeEngine:
                 queued.append(g.queue.popleft())
         self._build_groups()
         n = len(self.groups)
-        for i, fl in enumerate(inflight):
-            tgt = self.groups[i % n]
-            fl.req.group = tgt.gid
-            fl.req.migrations += 1
-            tgt.resume.append(fl)
-        for i, req in enumerate(queued):
-            tgt = self.groups[i % n]
-            req.group = tgt.gid
-            self.queues.push(tgt.gid, req)
+        if self.ecfg.paged:
+            # tables follow their domain's new owner; only streams
+            # rebalanced off the owner copy their used pages cross-domain
+            cap = max(1, math.ceil(len(inflight) / n))
+            load = {g.gid: 0 for g in self.groups}
+            for fl in inflight:
+                tgt = self._owner_group(fl.req.table.domain)
+                if load[tgt.gid] >= cap:
+                    alt = min(self.groups,
+                              key=lambda gr: (load[gr.gid], gr.gid))
+                    if alt is not tgt and self._migrate_into(fl.req.table,
+                                                            alt):
+                        tgt = alt
+                fl.req.group = tgt.gid
+                fl.req.migrations += 1
+                load[tgt.gid] += 1
+                tgt.resume.append(fl)
+            for req in queued:
+                tgt = self._owner_group(req.table.domain)
+                req.group = tgt.gid
+                self.queues.push(tgt.gid, req)
+        else:
+            for i, fl in enumerate(inflight):
+                tgt = self.groups[i % n]
+                fl.req.group = tgt.gid
+                fl.req.migrations += 1
+                tgt.resume.append(fl)
+            for i, req in enumerate(queued):
+                tgt = self.groups[i % n]
+                req.group = tgt.gid
+                self.queues.push(tgt.gid, req)
         self.relayouts.append({
             "step": decision.step, "old_groups": len(old_groups),
             "new_groups": n, "moved_slots": len(inflight),
-            "requeued": len(queued), "reason": decision.reason})
+            "requeued": len(queued), "reason": decision.reason,
+            "blocks_migrated": self.counters.totals.get(
+                "kv_blocks_migrated", 0.0) - mig0})
         if self._running:
             for g in self.groups:
                 self._spawn_group(g)
 
+    # -- paged device-side step builders -------------------------------------
+    def _make_paged_decode(self):
+        cfg, spec = self.cfg, self.pool.spec
+
+        def paged_decode(params, storage, tables, state_slots, tokens, pos):
+            view = dec.gather_cache_view(storage, spec, tables, state_slots)
+            logits, view = dec.decode_step(params, cfg, view, tokens, pos)
+            storage = dec.scatter_cache_view(storage, spec, tables,
+                                             state_slots, view)
+            return logits, storage
+
+        return paged_decode
+
+    def _make_commit_prefill(self):
+        spec = self.pool.spec
+
+        def commit(storage, tables, state_slots, cache1):
+            return dec.scatter_cache_view(storage, spec, tables,
+                                          state_slots, cache1)
+
+        return commit
+
+    def _table_row(self, req: Optional[Request]) -> Tuple[List[int], int]:
+        """Null-padded (pages, state_slot) row for the gather indices."""
+        P = self.pool.pages_per_stream
+        if req is None or req.table is None:
+            return [0] * P, 0
+        t = req.table
+        return t.blocks + [0] * (P - len(t.blocks)), t.state_slot
+
+    def _group_indices(self, g: _Group) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        rows, slots = zip(*(self._table_row(r) for r in g.slots))
+        P = self.pool.pages_per_stream
+        tables = jnp.asarray(
+            np.asarray(rows, np.int32).reshape(len(g.slots), P))
+        return tables, jnp.asarray(np.asarray(slots, np.int32))
+
     # -- one engine tick: admit + prefill + batched decode --------------------
     def _install(self, g: _Group, slot: int, fl: _InFlight):
-        """Write a migrated stream's KV state into a free slot."""
-        g.cache = jax.tree.map(lambda pool, one: pool.at[:, slot].set(one),
-                               g.cache, fl.cache)
+        """Re-slot a migrated stream.  Paged mode is pure bookkeeping (the
+        KV never left the pool); legacy mode writes the carried slice."""
+        if not self.ecfg.paged:
+            g.cache = jax.tree.map(
+                lambda pool, one: pool.at[:, slot].set(one),
+                g.cache, fl.cache)
         g.slots[slot] = fl.req
         g.pos = g.pos.at[slot].set(fl.pos)
         g.tokens = g.tokens.at[slot, 0].set(fl.token)
         self.counters.add("kv_slots_restored", 1)
+
+    def _accept_steal(self, g: _Group):
+        """TieredQueues accept hook: a stolen request's KV reservation must
+        move into the thief's memory domain (memory follows work)."""
+        def accept(req: Request, _tier: str) -> bool:
+            if not self.ecfg.paged or req.table is None:
+                return True
+            return self._migrate_into(req.table, g)
+        return accept
 
     def _admit(self, g: _Group):
         for slot in g.free_slots():
             if g.resume:                       # migrated streams first
                 self._install(g, slot, g.resume.pop(0))
                 continue
-            req, tier = self.queues.pop(g.gid)
+            req, tier = self.queues.pop(g.gid, accept=self._accept_steal(g))
             if req is None:
                 break
             if tier != "local":
@@ -235,19 +483,43 @@ class ServeEngine:
             nxt = int(jnp.argmax(logits[0]))
             req.generated.append(nxt)
             req.t_first = self._clock()
-            # copy the single-stream cache into the group slot
-            g.cache = jax.tree.map(
-                lambda pool, one: pool.at[:, slot].set(one[:, 0]),
-                g.cache, cache1)
+            self.counters.add("prefills", 1)
+            if len(req.generated) >= req.max_new:
+                # prefill's token already met the budget (max_new=1):
+                # finish without ever taking a decode slot or pool pages
+                req.t_done = req.t_first
+                self._inflight -= 1
+                if self.ecfg.paged:
+                    self.pool.free(req.table)
+                continue
+            if self.ecfg.paged:
+                tables, slots1 = self._table_row(req)
+                self.pool.storage = self._commit_prefill(
+                    self.pool.storage,
+                    jnp.asarray(np.asarray([tables], np.int32)),
+                    jnp.asarray(np.asarray([slots1], np.int32)), cache1)
+                req.table.used_pages = self.pool.pages_needed(
+                    len(req.prompt))
+            else:
+                # copy the single-stream cache into the group slot
+                g.cache = jax.tree.map(
+                    lambda pool, one: pool.at[:, slot].set(one[:, 0]),
+                    g.cache, cache1)
             g.slots[slot] = req
             g.pos = g.pos.at[slot].set(len(req.prompt))
             g.tokens = g.tokens.at[slot, 0].set(nxt)
-            self.counters.add("prefills", 1)
 
     def _decode_tick(self, g: _Group):
         if not any(s is not None for s in g.slots):
             return
-        logits, g.cache = self._decode(self.params, g.cache, g.tokens, g.pos)
+        if self.ecfg.paged:
+            tables, slots1 = self._group_indices(g)
+            logits, self.pool.storage = self._paged_decode(
+                self.params, self.pool.storage, tables, slots1,
+                g.tokens, g.pos)
+        else:
+            logits, g.cache = self._decode(self.params, g.cache, g.tokens,
+                                           g.pos)
         nxt = jnp.argmax(logits, axis=-1)
         g.pos = g.pos + jnp.where(
             jnp.array([s is not None for s in g.slots]), 1, 0)
@@ -258,9 +530,15 @@ class ServeEngine:
             if req is None:
                 continue
             req.generated.append(int(nxt[i]))
+            if self.ecfg.paged:
+                req.table.used_pages = self.pool.pages_needed(
+                    len(req.prompt) + len(req.generated))
             if len(req.generated) >= req.max_new:
                 req.t_done = now
                 g.slots[i] = None
+                self._inflight -= 1
+                if self.ecfg.paged:
+                    self.pool.free(req.table)  # wakes parked admissions
         self.counters.add("decode_steps", 1)
         self.counters.add("decode_tokens",
                           sum(1 for s in g.slots if s is not None))
@@ -268,9 +546,8 @@ class ServeEngine:
     # -- engine task (coroutine per group, scheduled by the task runtime) ----
     def _group_task(self, g: _Group):
         while not g.retired:
-            others_waiting = (self.queues.pending()
-                              or any(o.resume for o in self.groups))
-            if not g.busy() and not others_waiting:
+            outstanding = self._inflight > 0 or self._clients > 0
+            if not g.busy() and not outstanding:
                 return
             self._admit(g)
             self._decode_tick(g)
@@ -280,6 +557,31 @@ class ServeEngine:
         self.sched.spawn(self._group_task(g), group=g.gid,
                          name=f"group{g.gid}")
 
+    def _round_metrics(self) -> Optional[Callable[[], Dict[str, float]]]:
+        """Per-round profiler feed: KV-pool gauges + deltas since the
+        previous round (None in legacy slot-monolith mode)."""
+        if self.pool is None:
+            return None
+        state = {"t": self._clock(),
+                 "kv_alloc_failures": self.counters.totals.get(
+                     "kv_alloc_failures", 0.0),
+                 "kv_blocks_migrated": self.counters.totals.get(
+                     "kv_blocks_migrated", 0.0)}
+
+        def metrics() -> Dict[str, float]:
+            t1 = self._clock()
+            fails = self.counters.totals.get("kv_alloc_failures", 0.0)
+            mig = self.counters.totals.get("kv_blocks_migrated", 0.0)
+            out = {"step_time": t1 - state["t"],
+                   "kv_occupancy": self.pool.occupancy(),
+                   "kv_parks": fails - state["kv_alloc_failures"],
+                   "kv_blocks_migrated": mig - state["kv_blocks_migrated"]}
+            state.update(t=t1, kv_alloc_failures=fails,
+                         kv_blocks_migrated=mig)
+            return out
+
+        return metrics
+
     def run_until_done(self, *, max_rounds: int = 100000) -> Dict:
         trace: List[int] = []
         self._running = True
@@ -287,26 +589,46 @@ class ServeEngine:
             for g in self.groups:
                 self._spawn_group(g)
             self.sched.run_until_done(max_rounds=max_rounds,
-                                      concurrency_trace=trace)
+                                      concurrency_trace=trace,
+                                      metrics_fn=self._round_metrics())
         finally:
             self._running = False
-        return {"concurrency": trace, "counters": self.counters.snapshot(),
-                "relayouts": list(self.relayouts),
-                "decisions": [dataclasses.asdict(x)
-                              for x in self.controller.decisions]}
+        out = {"concurrency": trace, "counters": self.counters.snapshot(),
+               "relayouts": list(self.relayouts),
+               "decisions": [dataclasses.asdict(x)
+                             for x in self.controller.decisions]}
+        if self.pool is not None:
+            out["kv"] = self.pool.stats()
+        return out
 
-    # -- latency stats ---------------------------------------------------------
+    # -- latency / pool stats --------------------------------------------------
+    def kv_stats(self) -> Dict[str, float]:
+        """KV-pool health: occupancy, park (alloc-failure) rate,
+        blocks migrated per relayout."""
+        if self.pool is None:
+            return {}
+        s = self.pool.stats()
+        s["blocks_per_relayout"] = [r.get("blocks_migrated", 0.0)
+                                    for r in self.relayouts]
+        return s
+
     @staticmethod
     def stats(reqs: List[Request]) -> Dict[str, float]:
         done = [r for r in reqs if r.done]
         if not done:
             return {}
-        ttft = [r.t_first - r.arrived for r in done]
-        total = [r.t_done - r.arrived for r in done]
+        ttft = np.array([r.t_first - r.arrived for r in done])
+        total = np.array([r.t_done - r.arrived for r in done])
+        tpot = np.array([(r.t_done - r.t_first)
+                         / max(1, len(r.generated) - 1) for r in done])
         return {
             "n": len(done),
-            "ttft_mean": float(np.mean(ttft)),
-            "latency_mean": float(np.mean(total)),
+            "ttft_mean": float(ttft.mean()),
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p99": float(np.percentile(ttft, 99)),
+            "tpot_p50": float(np.percentile(tpot, 50)),
+            "tpot_p99": float(np.percentile(tpot, 99)),
+            "latency_mean": float(total.mean()),
             "latency_p95": float(np.percentile(total, 95)),
             "tokens": sum(len(r.generated) for r in done),
         }

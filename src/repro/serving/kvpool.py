@@ -1,0 +1,284 @@
+"""Paged KV-block allocator partitioned per chiplet-group memory domain —
+the second ARCAS pillar (hardware-aware memory allocation) applied to
+serving.
+
+The pool owns ONE physical storage pytree (``models/decode.py`` block-pool
+layout) whose block-id space is partitioned into per-chiplet-group *domains*
+(the NUMA-bind analogue: on TPU each domain's id range lives in that group's
+HBM).  A request holds a :class:`KVTable` — its ring pages as physical block
+ids inside exactly one domain, plus one per-stream state slot — instead of a
+slot in a monolithic per-replica cache array:
+
+  * admission reserves ``ceil(min(prompt+max_new, W) / block_tokens)`` pages
+    (short requests reserve less than the ring width, which is where the
+    capacity win over the slot monolith comes from);
+  * reservation failure is the serving back-pressure signal: the admission
+    coroutine parks on the pool's :class:`~repro.core.tasks.WaitQueue` via
+    ``yield BLOCK`` and is woken by ``free``;
+  * a relayout re-points block *tables* at the new owner replica of their
+    domain; only streams rebalanced onto a replica that does not own their
+    domain copy their **used** pages (``migrate``) — never whole cache
+    slices.
+
+Block id 0 and state slot 0 are reserved null entries: empty decode slots
+and the unreserved tail of short tables point at them, so gather/scatter
+shapes stay static (jit-stable) while null contents are never read (ring
+positions past a stream's last token are masked by ``cache_positions``).
+
+Budgets are expressed in *bytes* via ``costmodel.kv_cache_bytes`` and
+converted to blocks/state slots, so a pool can be sized to exactly the HBM
+footprint the old slot-monolith allocator used — or to a fraction of
+``ChipletTopology.group_hbm()`` on a real fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.costmodel import kv_cache_bytes
+from repro.core.counters import PerfCounters
+from repro.models import decode as dec
+
+
+def kv_bytes_exact(cfg: ModelConfig, n_tokens: int, max_len: int) -> float:
+    """Exact decode-state bytes of ONE stream holding ``n_tokens`` of
+    context (ring-capped at ``max_len``) — replaces the old
+    ``(prompt+generated)*2`` napkin estimate in migration accounting."""
+    s = ShapeConfig("kv", "decode", max(1, min(n_tokens, max_len)), 1)
+    return kv_cache_bytes(cfg, s, 1)
+
+
+@dataclasses.dataclass
+class KVTable:
+    """One stream's view into the pool: ring pages + state slot, resident
+    in a single chiplet-group domain."""
+    domain: int
+    blocks: List[int]               # reserved physical pages, ring order
+    state_slot: int                 # 0 = none (model has no state leaves)
+    used_pages: int = 0             # pages actually written (prefill/decode)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+
+class KVBlockPool:
+    """Block pool over ``n_domains`` chiplet-group memory domains.
+
+    Pure host-side bookkeeping (free lists, tables, counters) plus the
+    device-side storage pytree; gather/scatter/copy of actual pages happens
+    through ``models/decode.py`` view helpers.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_domains: int, max_len: int,
+                 blocks_per_domain: int, states_per_domain: int,
+                 block_tokens: int = 16,
+                 counters: Optional[PerfCounters] = None):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.n_domains = n_domains
+        self.counters = counters or PerfCounters()
+        self.spec = dec.cache_view_specs(cfg, max_len)
+        W = self.spec.width
+        if W:
+            bt = self._aligned_block_tokens(W, block_tokens)
+            self.block_tokens = bt
+            self.pages_per_stream = W // bt
+        else:                       # pure-state model (SSM): no ring pages
+            self.block_tokens = 1
+            self.pages_per_stream = 0
+        self.has_state = any(s.token_axis is None for s in self.spec.leaves)
+        self.blocks_per_domain = blocks_per_domain if W else 0
+        self.states_per_domain = states_per_domain if self.has_state else 0
+        # id 0 is the shared null entry; domain d owns
+        # [1 + d*per_domain, 1 + (d+1)*per_domain)
+        self._free_blocks: List[List[int]] = [
+            list(range(1 + d * self.blocks_per_domain,
+                       1 + (d + 1) * self.blocks_per_domain))
+            for d in range(n_domains)]
+        self._free_states: List[List[int]] = [
+            list(range(1 + d * self.states_per_domain,
+                       1 + (d + 1) * self.states_per_domain))
+            for d in range(n_domains)]
+        self.storage = dec.init_block_pool(
+            cfg, self.spec,
+            n_blocks=1 + n_domains * self.blocks_per_domain,
+            n_states=1 + n_domains * self.states_per_domain,
+            block_tokens=self.block_tokens, max_len=max_len)
+        self._on_free: List[Callable[[], None]] = []
+        self.peak_used_blocks = 0
+
+    # -- sizing helpers ----------------------------------------------------
+    @staticmethod
+    def _aligned_block_tokens(W: int, block_tokens: int) -> int:
+        """Largest page size <= block_tokens dividing the ring width."""
+        bt = min(block_tokens, W)
+        while W % bt:
+            bt -= 1
+        return bt
+
+    @classmethod
+    def blocks_for_streams(cls, cfg: ModelConfig, max_len: int,
+                           streams: int, block_tokens: int = 16) -> Dict:
+        """Per-domain budget equivalent to a slot monolith of ``streams``
+        full-length streams: the byte-for-byte capacity the old allocator
+        reserved per replica group."""
+        spec = dec.cache_view_specs(cfg, max_len)
+        W = spec.width
+        # same page-size alignment as __init__, so the budget always covers
+        # exactly `streams` full tables regardless of W % block_tokens
+        pages = W // cls._aligned_block_tokens(W, block_tokens) if W else 0
+        return {"blocks_per_domain": streams * pages,
+                "states_per_domain": streams}
+
+    def bytes_per_block(self) -> float:
+        """Token-page bytes from the cost model (state slots excluded)."""
+        if not self.pages_per_stream:
+            return 0.0
+        per2 = kv_bytes_exact(self.cfg, 2 * self.block_tokens, self.max_len)
+        per1 = kv_bytes_exact(self.cfg, self.block_tokens, self.max_len)
+        return max(per2 - per1, 0.0)
+
+    def domain_bytes(self) -> float:
+        state_b = (kv_bytes_exact(self.cfg, 1, self.max_len)
+                   - self.bytes_per_block() / max(1, self.block_tokens))
+        return (self.blocks_per_domain * self.bytes_per_block()
+                + self.states_per_domain * max(state_b, 0.0))
+
+    # -- accounting --------------------------------------------------------
+    def pages_needed(self, total_tokens: int) -> int:
+        if not self.pages_per_stream:
+            return 0
+        W = self.spec.width
+        bt = self.block_tokens
+        return min(self.pages_per_stream,
+                   max(1, math.ceil(min(total_tokens, W) / bt)))
+
+    def free_blocks(self, domain: int) -> int:
+        return len(self._free_blocks[domain])
+
+    def free_states(self, domain: int) -> int:
+        return len(self._free_states[domain])
+
+    def used_blocks(self) -> int:
+        total = self.n_domains * self.blocks_per_domain
+        return total - sum(len(f) for f in self._free_blocks)
+
+    def total_blocks(self) -> int:
+        return self.n_domains * self.blocks_per_domain
+
+    def occupancy(self) -> float:
+        """Fraction of pool capacity in use (blocks, or state slots for
+        pure-state models)."""
+        total = self.total_blocks()
+        if not total:
+            total = self.n_domains * self.states_per_domain
+            used = total - sum(len(f) for f in self._free_states)
+            return used / total if total else 0.0
+        return self.used_blocks() / total
+
+    def can_reserve(self, domain: int, pages: int) -> bool:
+        if self.has_state and not self._free_states[domain]:
+            return False
+        return len(self._free_blocks[domain]) >= pages
+
+    # -- alloc / free ------------------------------------------------------
+    def reserve(self, domain: int, total_tokens: int, *,
+                count_failure: bool = True) -> Optional[KVTable]:
+        """Reserve a full table for a stream of ``total_tokens`` context in
+        ``domain``; None when the domain cannot serve it right now.
+        ``count_failure=False`` lets a caller probing several domains count
+        one logical failure instead of one per domain."""
+        pages = self.pages_needed(total_tokens)
+        if pages > max(self.blocks_per_domain, 0) and pages:
+            raise ValueError(
+                f"request needs {pages} pages but a domain only has "
+                f"{self.blocks_per_domain}: raise the pool budget")
+        if self.has_state and self.states_per_domain == 0:
+            raise ValueError("pool has no state slots but model needs them")
+        if not self.can_reserve(domain, pages):
+            if count_failure:
+                self.counters.add("kv_alloc_failures", 1)
+            return None
+        blocks = [self._free_blocks[domain].pop() for _ in range(pages)]
+        slot = self._free_states[domain].pop() if self.has_state else 0
+        self.counters.add("kv_blocks_allocated", pages)
+        self.counters.add("kv_reservations", 1)
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks())
+        self._gauges()
+        return KVTable(domain, blocks, slot)
+
+    def free(self, table: KVTable):
+        """Return a table's pages + state slot and fire the free callbacks
+        (which unblock BLOCK-parked admission coroutines)."""
+        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        if self.has_state and table.state_slot:
+            self._free_states[table.domain].append(table.state_slot)
+        self.counters.add("kv_blocks_freed", len(table.blocks))
+        table.blocks = []
+        table.used_pages = 0
+        self._gauges()
+        for cb in self._on_free:
+            cb()
+
+    def on_free(self, cb: Callable[[], None]):
+        self._on_free.append(cb)
+
+    # -- migration ---------------------------------------------------------
+    def migrate(self, table: KVTable, new_domain: int) -> bool:
+        """Move a table into ``new_domain``: re-reserve there, copy only the
+        **used** pages (+ state slot) on device, free the old reservation.
+        Returns False (no side effects) when the target domain lacks space.
+        """
+        if table.domain == new_domain:
+            return True
+        pages = len(table.blocks)
+        if (len(self._free_blocks[new_domain]) < pages
+                or (self.has_state and not self._free_states[new_domain])):
+            return False
+        new_blocks = [self._free_blocks[new_domain].pop()
+                      for _ in range(pages)]
+        new_slot = (self._free_states[new_domain].pop()
+                    if self.has_state else 0)
+        used = table.used_pages
+        if used or (self.has_state and table.state_slot):
+            self.storage = dec.copy_pool_entries(
+                self.storage, self.spec,
+                table.blocks[:used], new_blocks[:used],
+                src_state=table.state_slot if self.has_state else None,
+                dst_state=new_slot if self.has_state else None)
+        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        if self.has_state and table.state_slot:
+            self._free_states[table.domain].append(table.state_slot)
+        self.counters.add("kv_blocks_migrated", used)
+        self.counters.add("kv_tables_migrated", 1)
+        table.domain = new_domain
+        table.blocks = new_blocks
+        table.state_slot = new_slot
+        self._gauges()
+        for cb in self._on_free:      # the old domain gained capacity
+            cb()
+        return True
+
+    def _gauges(self):
+        self.counters.set("kv_pool_used_blocks", float(self.used_blocks()))
+        self.counters.set("kv_pool_total_blocks", float(self.total_blocks()))
+        self.counters.set("kv_pool_occupancy", self.occupancy())
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        snap = self.counters.totals
+        fails = snap.get("kv_alloc_failures", 0.0)
+        grants = snap.get("kv_reservations", 0.0)
+        return {
+            "occupancy": self.occupancy(),
+            "peak_used_blocks": float(self.peak_used_blocks),
+            "total_blocks": float(self.total_blocks()),
+            "alloc_failures": fails,
+            "park_rate": fails / max(1.0, fails + grants),
+            "blocks_migrated": snap.get("kv_blocks_migrated", 0.0),
+            "tables_migrated": snap.get("kv_tables_migrated", 0.0),
+            "bytes_per_domain": self.domain_bytes(),
+        }

@@ -286,10 +286,12 @@ def test_serving_batched_equals_single():
 
 
 def test_serving_midrun_relayout_preserves_tokens():
-    """The headline adaptive behavior (ISSUE 1 acceptance): under uneven
-    load the controller changes spread_rate DURING run_until_done, replica
-    groups are rebuilt, in-flight KV slots survive migration, and every
-    request generates exactly the tokens of a non-adaptive run."""
+    """The headline adaptive behavior (ISSUE 1 acceptance, extended to the
+    paged allocator): under uneven load the controller changes spread_rate
+    DURING run_until_done, replica groups are rebuilt, in-flight streams
+    survive migration — their block tables re-point at the new owner of
+    their chiplet-group domain — and every request generates exactly the
+    tokens of a non-adaptive run."""
     from repro.core.controller import ControllerConfig
     from repro.serving.engine import EngineConfig, ServeEngine
     cfg = reduced_config(REGISTRY["llama3-8b"])
@@ -299,11 +301,13 @@ def test_serving_midrun_relayout_preserves_tokens():
     # round-robin routing puts every 4th request on group 0; its short
     # generations drain first, so group 0 steals early and remote_bytes
     # crosses the threshold while other groups still hold KV state
+    # (pool_streams=4: generous budget, so nothing parks and all twelve
+    # queue up front like the old slot-monolith test)
     max_new = [2 if i % 4 == 0 else 10 for i in range(12)]
 
     def run(adaptive):
         ecfg = EngineConfig(
-            max_batch=1, max_len=32, adaptive=adaptive,
+            max_batch=1, max_len=32, adaptive=adaptive, pool_streams=4,
             controller=ControllerConfig(scheduler_timer=3, threshold=1.0,
                                         min_dwell=1))
         eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=0)
@@ -314,21 +318,299 @@ def test_serving_midrun_relayout_preserves_tokens():
 
     eng_a, reqs_a, res_a = run(True)
     assert all(r.done for r in reqs_a)
+    # paged mode is the default
+    assert eng_a.ecfg.paged and eng_a.pool is not None
     # at least one relayout fired mid-run and actually changed the groups
     assert len(res_a["relayouts"]) >= 1
     assert res_a["relayouts"][0]["old_groups"] != \
         res_a["relayouts"][0]["new_groups"]
     assert len(eng_a.groups) != 4
-    # in-flight KV state survived the migration
+    # in-flight streams survived the migration
     assert res_a["relayouts"][0]["moved_slots"] >= 1
     assert res_a["counters"]["kv_slots_migrated"] == \
         res_a["counters"]["kv_slots_restored"]
     assert sum(r.migrations for r in reqs_a) >= 1
+    # spread relayouts merge groups: every domain keeps its owner, so NO
+    # block contents moved — tables only
+    spreads = [r for r in res_a["relayouts"]
+               if r["new_groups"] < r["old_groups"]]
+    assert spreads and all(r["blocks_migrated"] == 0 for r in spreads)
     # identical generations vs the non-adaptive run
     eng_b, reqs_b, res_b = run(False)
     assert all(r.done for r in reqs_b)
     assert res_b["relayouts"] == [] and res_b["decisions"] == []
     assert [r.generated for r in reqs_a] == [r.generated for r in reqs_b]
+
+
+def test_serving_legacy_slot_monolith_still_works():
+    """paged=False keeps the PR-1 slot-monolith path alive (and its tokens
+    match the paged path bit-for-bit)."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, cfg.vocab, size=7) for _ in range(4)]
+
+    def run(paged):
+        eng = ServeEngine(cfg, topo,
+                          EngineConfig(max_batch=2, max_len=32, paged=paged),
+                          spread_rate=1, seed=0)
+        reqs = [eng.submit(p, max_new=4) for p in prompts]
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        return [r.generated for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_paged_pool_migrate_touches_only_referenced_blocks():
+    """A cross-domain migration copies exactly the table's USED pages (+
+    state slot); every other physical block in the pool is bit-identical
+    afterwards — never whole-cache slices."""
+    import jax.numpy as jnp
+    from repro.serving.kvpool import KVBlockPool
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    pool = KVBlockPool(cfg, n_domains=2, max_len=32, blocks_per_domain=4,
+                       states_per_domain=2, block_tokens=16)
+    # fill the whole storage with sentinels so copies are observable
+    pool.storage = jax.tree.map(
+        lambda a: jnp.arange(a.size, dtype=a.dtype).reshape(a.shape),
+        pool.storage)
+    t = pool.reserve(0, total_tokens=32)          # 2 pages in domain 0
+    t.used_pages = 1                              # only page 0 written
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(pool.storage)]
+    src = list(t.blocks)
+    assert pool.migrate(t, 1)
+    assert t.domain == 1
+    dst = list(t.blocks)
+    assert src != dst and len(dst) == 2
+    after = [np.asarray(l) for l in jax.tree.leaves(pool.storage)]
+    touched = {dst[0]}                            # only the used page copied
+    for b4, a4, spec in zip(before, after, pool.spec.leaves):
+        if spec.token_axis is None:
+            continue
+        moved = np.moveaxis(a4, spec.batch_axis, 0)
+        moved_b4 = np.moveaxis(b4, spec.batch_axis, 0)
+        for blk in range(moved.shape[0]):
+            if blk in touched:
+                np.testing.assert_array_equal(
+                    moved[blk], np.moveaxis(
+                        b4, spec.batch_axis, 0)[src[0]])
+            else:
+                np.testing.assert_array_equal(moved[blk], moved_b4[blk])
+    assert pool.counters.totals["kv_blocks_migrated"] == 1  # used page only
+
+
+def test_paged_compact_relayout_migrates_used_blocks_only():
+    """Splitting a big replica (compact move) rebalances some in-flight
+    streams onto replicas that don't own their domain: exactly those
+    streams' used pages are copied, far fewer than a whole-cache move."""
+    from repro.core.controller import ControllerConfig
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
+    rng = np.random.default_rng(11)
+    # start fully spread (one big replica over 4 domains); a huge threshold
+    # makes Algorithm 1 compact mid-run (4 -> 2 groups)
+    ecfg = EngineConfig(
+        max_batch=6, max_len=32, adaptive=True, pool_streams=6,
+        controller=ControllerConfig(scheduler_timer=3, threshold=1e18,
+                                    min_dwell=0))
+    eng = ServeEngine(cfg, topo, ecfg, spread_rate=4, seed=0)
+    reqs = [eng.submit(rng.integers(2, cfg.vocab, size=6), max_new=12)
+            for _ in range(6)]
+    res = eng.run_until_done()
+    assert all(r.done for r in reqs)
+    compacts = [r for r in res["relayouts"]
+                if r["new_groups"] > r["old_groups"]]
+    assert compacts, res["relayouts"]
+    # rebalancing copied SOME used pages, but far fewer than the whole
+    # cache (6 streams x 2 pages): tables moved, data mostly stayed put
+    moved = sum(r["blocks_migrated"] for r in compacts)
+    total_pages = 6 * eng.pool.pages_per_stream
+    assert 1 <= moved < total_pages
+    assert res["counters"]["kv_tables_migrated"] >= 1
+
+
+def test_paged_pool_unaligned_ring_width():
+    """Ring widths that aren't multiples of block_tokens align the page
+    size down identically in budget and pool, so a full-length stream
+    always fits its budgeted domain (regression: max_len=40, bt=16)."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    from repro.serving.kvpool import KVBlockPool
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    budget = KVBlockPool.blocks_for_streams(cfg, max_len=40, streams=1,
+                                            block_tokens=16)
+    pool = KVBlockPool(cfg, n_domains=1, max_len=40, block_tokens=16,
+                       **budget)
+    assert budget["blocks_per_domain"] == pool.pages_per_stream
+    t = pool.reserve(0, total_tokens=40)       # full-length stream fits
+    assert t is not None and len(t.blocks) == pool.pages_per_stream
+    # end-to-end: the engine serves a full-length request at this max_len
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=1, max_len=40, adaptive=False),
+                      spread_rate=1, seed=0)
+    rng = np.random.default_rng(1)
+    req = eng.submit(rng.integers(2, cfg.vocab, size=20), max_new=20)
+    eng.run_until_done()
+    assert req.done and len(req.generated) == 20
+
+
+def test_paged_admission_parks_on_exhaustion_and_resumes():
+    """Pool exhaustion is the back-pressure mechanism: admissions park via
+    yield BLOCK (counted as alloc failures + blocked tasks), are woken by
+    the pool's free callback, and every request still completes."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    rng = np.random.default_rng(5)
+    # budget: ONE full-length stream per domain; twelve long requests
+    # (2 pages each = a whole domain) must take turns through the pool
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=2, max_len=32, pool_streams=1,
+                                   adaptive=False),
+                      spread_rate=1, seed=0)
+    reqs = [eng.submit(rng.integers(2, cfg.vocab, size=20), max_new=12)
+            for _ in range(12)]
+    res = eng.run_until_done()
+    assert all(r.done for r in reqs)
+    c = res["counters"]
+    assert c["kv_alloc_failures"] > 0          # pool really was exhausted
+    assert c["tasks_blocked"] > 0              # admissions parked via BLOCK
+    assert c["tasks_unblocked"] > 0            # and were woken by frees
+    assert res["kv"]["park_rate"] > 0
+    assert eng.pool.occupancy() == 0.0         # everything freed at the end
+
+
+def test_paged_2x_batch_same_memory_budget():
+    """max_batch twice the slot-monolith limit completes — and actually
+    decodes more concurrent streams than the budget's stream count — for
+    the same per-domain byte budget."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    rng = np.random.default_rng(9)
+    # pool budget = 1 full stream/domain (the old monolith limit for
+    # max_batch=1); run with max_batch=2
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=2, max_len=48, pool_streams=1,
+                                   adaptive=False),
+                      spread_rate=1, seed=0)
+    peak = [0]
+    orig = eng._decode_tick
+
+    def spy(g):
+        peak[0] = max(peak[0], sum(s is not None for s in g.slots))
+        orig(g)
+
+    eng._decode_tick = spy
+    # short requests: one page each, so two fit in one domain's budget
+    reqs = [eng.submit(rng.integers(2, cfg.vocab, size=6), max_new=6)
+            for _ in range(8)]
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert peak[0] == 2                        # 2x the monolith's 1 slot
+    assert eng.pool.peak_used_blocks <= eng.pool.total_blocks()
+
+
+def test_serving_max_new_one_generates_one_token():
+    """max_new=1 is satisfied by the prefill token: no decode slot, no
+    extra token (regression: the old path always decoded once more)."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=2, max_len=32, adaptive=False),
+                      spread_rate=1, seed=0)
+    rng = np.random.default_rng(6)
+    one = eng.submit(rng.integers(2, cfg.vocab, size=8), max_new=1)
+    two = eng.submit(rng.integers(2, cfg.vocab, size=8), max_new=3)
+    eng.run_until_done()
+    assert one.done and len(one.generated) == 1
+    assert two.done and len(two.generated) == 3
+    assert eng.pool.occupancy() == 0.0
+
+
+def test_paged_admission_uses_all_group_domains():
+    """A replica spanning several domains admits into ANY of them: with
+    spread_rate=2 one group owns two 1-stream domains and serves two
+    full-length requests concurrently without parking."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["llama3-8b"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=2, max_len=32, pool_streams=1,
+                                   adaptive=False),
+                      spread_rate=2, seed=0)
+    rng = np.random.default_rng(8)
+    # two full-length requests: 2 pages each = one whole domain each
+    reqs = [eng.submit(rng.integers(2, cfg.vocab, size=20), max_new=12)
+            for _ in range(2)]
+    res = eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert res["counters"].get("kv_alloc_failures", 0) == 0
+    assert {r.table.domain for r in reqs} == {0, 1}
+
+
+def test_openloop_client_submits_over_time():
+    """The open-loop client coroutine shares the TaskRuntime: arrivals
+    interleave with decode (some requests finish before later ones are even
+    submitted) and all complete."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    cfg = reduced_config(REGISTRY["mamba2-780m"])
+    topo = ChipletTopology(n_pods=1, groups_per_pod=2, chips_per_group=1)
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(cfg, topo,
+                      EngineConfig(max_batch=2, max_len=32, adaptive=False),
+                      spread_rate=1, seed=0)
+    sched = [(6, rng.integers(2, cfg.vocab, size=5), 3) for _ in range(6)]
+    eng.open_loop_client(sched)
+    res = eng.run_until_done()
+    reqs = eng.submitted
+    assert len(reqs) == 6
+    assert all(r.done for r in reqs)
+    # open-loop: a later arrival happened after an earlier completion
+    assert max(r.arrived for r in reqs) > min(r.t_done for r in reqs)
+    st = eng.stats(reqs)
+    assert st["n"] == 6 and st["ttft_p99"] >= st["ttft_p50"] >= 0
+    assert res["kv"]["occupancy"] == 0.0
+
+
+def test_tiered_queues_group_tier_order():
+    """With neighborhoods, request stealing walks group -> pod -> fleet
+    (ROADMAP "TieredQueues group tier")."""
+    from repro.core.scheduler import TieredQueues
+    from repro.core.counters import PerfCounters
+    cnt = PerfCounters()
+    tq = TieredQueues([0, 0, 0, 1], neighborhoods=[0, 0, 1, 2],
+                      counters=cnt, bytes_fn=lambda r: 4.0)
+    tq.push(1, "near")        # same pod, same neighborhood as queue 0
+    tq.push(2, "far")         # same pod, different neighborhood
+    tq.push(3, "other_pod")   # different pod
+    assert tq.pop(0) == ("near", "group")
+    assert tq.pop(0) == ("far", "pod")
+    assert tq.pop(0) == ("other_pod", "fleet")
+    assert tq.pop(0) == (None, None)
+    assert cnt.totals["steals_group"] == 1
+    assert cnt.totals["steals_pod"] == 1
+    assert cnt.totals["steals_fleet"] == 1
+    assert cnt.totals["remote_bytes"] == 12.0
+    assert cnt.totals["dcn_bytes"] == 4.0     # only the cross-pod move
+
+
+def test_tiered_queues_accept_hook_refuses_steal():
+    """pop(accept=...) leaves refused items on their victim queue and the
+    steal uncounted (engine: KV reservation cannot move)."""
+    from repro.core.scheduler import TieredQueues
+    from repro.core.counters import PerfCounters
+    cnt = PerfCounters()
+    tq = TieredQueues([0, 0], counters=cnt)
+    tq.push(1, "x")
+    assert tq.pop(0, accept=lambda item, tier: False) == (None, None)
+    assert len(tq.queue(1)) == 1              # still there
+    assert cnt.totals.get("steals_pod", 0) == 0
+    assert tq.pop(0) == ("x", "pod")          # unconditional pop succeeds
 
 
 def test_serving_request_steal_tier_order():
