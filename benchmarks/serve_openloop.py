@@ -1,22 +1,26 @@
 """Open-loop serving benchmark: Poisson-ish arrivals against the paged
-chiplet-aware KV allocator.
+chiplet-aware KV allocator, comparing LAZY (chunked prefill + elastic page
+growth) against EAGER (full capped reservation at admission) for the same
+byte budget.
 
 A client coroutine on the engine's shared TaskRuntime submits requests over
 time from a seeded schedule (exponential inter-arrival gaps measured in
-engine rounds), so the adaptive controller sees steady-state load — not an
-up-front queue — and TTFT / TPOT tails are real.
+engine rounds) with a LONG-TAIL ``max_new`` mix — most requests are short,
+a minority run to a large token budget.  That is exactly the workload where
+eager reservation wastes memory: every long-tail request pins its worst-
+case page count at admission, while the lazy allocator commits one chunk's
+pages and grows as ``pos`` crosses page boundaries, parking mid-decode on
+exhaustion.  The benchmark reports the *admitted concurrency* (peak
+simultaneously-reserved streams) both ways, plus TTFT/TPOT tails, park /
+lazy-growth / eviction counts, and the per-chunk prefill footprint from
+``costmodel.prefill_chunk_bytes`` against the whole-prompt buffer eager
+prefill materializes.
 
-The run is deliberately oversubscribed to show the paged allocator's
-capacity win: the KV pool is budgeted for ``--pool-streams`` full-length
-streams per chiplet-group domain (exactly the bytes the old slot-monolith
-allocator reserved), while ``max_batch`` is set to **2x** that.  Short
-requests reserve only the pages they need, so the run completes at twice
-the old concurrency for the same memory budget; when the pool does fill,
-admissions park via ``yield BLOCK`` and resume on frees instead of sitting
-in a dumb queue.
-
-    PYTHONPATH=src python benchmarks/serve_openloop.py
-    PYTHONPATH=src python benchmarks/serve_openloop.py --smoke   # CI
+    PYTHONPATH=src python benchmarks/serve_openloop.py                  # both
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked
+    PYTHONPATH=src python benchmarks/serve_openloop.py --eager
+    PYTHONPATH=src python benchmarks/serve_openloop.py --smoke          # CI
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked --smoke
 """
 from __future__ import annotations
 
@@ -32,21 +36,90 @@ from common import emit, row
 
 from repro.configs import REGISTRY, reduced_config
 from repro.core.controller import ControllerConfig
+from repro.core.costmodel import kv_cache_bytes, prefill_chunk_bytes
+from repro.configs.base import ShapeConfig
 from repro.core.topology import ChipletTopology
 from repro.serving.engine import EngineConfig, ServeEngine
 
 
-def poisson_schedule(seed: int, n: int, mean_gap: float,
-                     vocab: int, max_len: int):
-    """Seeded (gap_rounds, prompt, max_new) arrivals; exponential gaps."""
+def longtail_schedule(seed: int, n: int, mean_gap: float,
+                      vocab: int, max_len: int):
+    """Seeded (gap_rounds, prompt, max_new) arrivals; exponential gaps and
+    a long-tail ``max_new`` mix: ~3/4 short generations, ~1/4 that run
+    close to the ring width (the requests whose eager reservations pin
+    whole domains)."""
     rng = np.random.default_rng(seed)
     out = []
     for _ in range(n):
         gap = int(rng.exponential(mean_gap))
-        plen = int(rng.integers(4, max(5, max_len // 4)))
-        max_new = int(rng.integers(4, max(5, max_len // 4)))
+        # prompts up to half the ring: long ones span several prefill chunks
+        plen = int(rng.integers(4, max(5, max_len // 2)))
+        tail_lo = min(max_len // 2, max_len - plen - 1)
+        if tail_lo > 4 and rng.random() < 0.25:
+            max_new = int(rng.integers(tail_lo, max_len - plen))
+        else:
+            max_new = int(rng.integers(4, max(5, max_len // 8)))
         out.append((gap, rng.integers(2, vocab, size=plen), max_new))
     return out
+
+
+def run_mode(args, cfg, *, lazy: bool):
+    topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
+    # max_batch is 2x the memory budget's stream count: the paged pool
+    # admits by pages actually reserved, not worst-case slots
+    max_batch = 2 * args.pool_streams
+    ecfg = EngineConfig(
+        max_batch=max_batch, max_len=args.max_len, adaptive=True, lazy=lazy,
+        pool_streams=args.pool_streams,
+        controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
+                                    min_dwell=2))
+    eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
+    sched = longtail_schedule(args.seed, args.requests, args.mean_gap,
+                              cfg.vocab, args.max_len)
+    eng.open_loop_client(sched)
+    res = eng.run_until_done()
+    reqs = eng.submitted
+    assert len(reqs) == args.requests
+    assert all(r.done for r in reqs), \
+        f"{sum(not r.done for r in reqs)} requests unfinished"
+    return eng, res
+
+
+def report(mode: str, args, eng, res):
+    st = ServeEngine.stats(eng.submitted)
+    kv = eng.kv_stats()
+    c = res["counters"]
+    emit([
+        row(f"openloop_ttft_p50[{mode}]", st["ttft_p50"] * 1e6,
+            f"p99={st['ttft_p99']*1e6:.0f}us n={st['n']}"),
+        row(f"openloop_tpot_p50[{mode}]", st["tpot_p50"] * 1e6,
+            f"p99={st['tpot_p99']*1e6:.0f}us tokens={st['tokens']}"),
+        row(f"openloop_admitted[{mode}]", kv["peak_active_tables"],
+            f"peak concurrent reservations (budget="
+            f"{args.pool_streams} streams/domain), peak_blocks="
+            f"{kv['peak_used_blocks']:.0f}/{kv['total_blocks']:.0f}"),
+        row(f"openloop_backpressure[{mode}]", kv["alloc_failures"],
+            f"park_rate={kv['park_rate']:.2f} "
+            f"mid_decode_parks={kv['mid_decode_parks']:.0f} "
+            f"lazy_grows={kv['lazy_grows']:.0f} "
+            f"evictions={kv['evictions']:.0f} "
+            f"unblocked={c.get('tasks_unblocked', 0):.0f}"),
+        row(f"openloop_migration[{mode}]", kv["blocks_migrated"],
+            f"tables_migrated={kv['tables_migrated']:.0f} "
+            f"relayouts={len(res['relayouts'])}"),
+    ])
+    if mode == "lazy":
+        max_prompt = max(len(r.prompt) for r in eng.submitted)
+        whole = kv_cache_bytes(
+            eng.cfg, ShapeConfig("kv", "decode", max_prompt, 1), 1)
+        emit([row("openloop_prefill_chunk_bytes",
+                  kv["prefill_chunk_bytes"],
+                  f"chunks={kv['prefill_chunks']:.0f} vs whole-prompt "
+                  f"buffer {whole:.0f}B at S={max_prompt}")])
+    moves = [(r["old_groups"], r["new_groups"], r["blocks_migrated"])
+             for r in res["relayouts"]]
+    print(f"[{mode}] relayouts (old_groups, new_groups, blocks_migrated): "
+          f"{moves}")
 
 
 def main():
@@ -59,6 +132,11 @@ def main():
                          "(the old slot-monolith limit)")
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunked", action="store_true",
+                    help="run ONLY the lazy mode (chunked prefill + "
+                         "elastic page growth)")
+    ap.add_argument("--eager", action="store_true",
+                    help="run ONLY the eager-reservation mode")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: few requests, fast")
     args = ap.parse_args()
@@ -67,47 +145,30 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
-    topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
-    # max_batch is 2x the memory budget's stream count: the paged pool
-    # admits by pages actually needed, not worst-case slots
-    max_batch = 2 * args.pool_streams
-    ecfg = EngineConfig(
-        max_batch=max_batch, max_len=args.max_len, adaptive=True,
-        pool_streams=args.pool_streams,
-        controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
-                                    min_dwell=2))
-    eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
-    sched = poisson_schedule(args.seed, args.requests, args.mean_gap,
-                             cfg.vocab, args.max_len)
-    eng.open_loop_client(sched)
-    res = eng.run_until_done()
-
-    reqs = eng.submitted
-    assert len(reqs) == args.requests
-    assert all(r.done for r in reqs), \
-        f"{sum(not r.done for r in reqs)} requests unfinished"
-    st = ServeEngine.stats(reqs)
-    kv = eng.kv_stats()
-    c = res["counters"]
-    emit([
-        row("openloop_ttft_p50", st["ttft_p50"] * 1e6,
-            f"p99={st['ttft_p99']*1e6:.0f}us n={st['n']}"),
-        row("openloop_tpot_p50", st["tpot_p50"] * 1e6,
-            f"p99={st['tpot_p99']*1e6:.0f}us tokens={st['tokens']}"),
-        row("openloop_capacity", float(max_batch),
-            f"max_batch=2x pool budget ({args.pool_streams} streams/domain),"
-            f" peak_blocks={kv['peak_used_blocks']:.0f}"
-            f"/{kv['total_blocks']:.0f}"),
-        row("openloop_backpressure", kv["alloc_failures"],
-            f"park_rate={kv['park_rate']:.2f} "
-            f"unblocked={c.get('tasks_unblocked', 0):.0f}"),
-        row("openloop_migration", kv["blocks_migrated"],
-            f"tables_migrated={kv['tables_migrated']:.0f} "
-            f"relayouts={len(res['relayouts'])}"),
-    ])
-    moves = [(r["old_groups"], r["new_groups"], r["blocks_migrated"])
-             for r in res["relayouts"]]
-    print(f"relayouts (old_groups, new_groups, blocks_migrated): {moves}")
+    modes = []
+    if args.prefill_chunked or not args.eager:
+        modes.append("lazy")
+    if args.eager or not args.prefill_chunked:
+        modes.append("eager")
+    runs = {}
+    for mode in modes:
+        eng, res = run_mode(args, cfg, lazy=(mode == "lazy"))
+        report(mode, args, eng, res)
+        runs[mode] = eng
+    if len(runs) == 2:
+        # same schedule, same byte budget: lazy must admit at least as much
+        # concurrency as eager and generate identical tokens
+        toks = {m: [e.generated for e in sorted(runs[m].submitted,
+                                                key=lambda r: r.rid)]
+                for m in runs}
+        assert toks["lazy"] == toks["eager"], \
+            "lazy/eager token divergence"
+        lz = runs["lazy"].pool.peak_active_tables
+        eg = runs["eager"].pool.peak_active_tables
+        print(f"admitted concurrency: lazy={lz} eager={eg} "
+              f"(same {args.pool_streams} streams/domain budget); "
+              f"token-identical: True")
+        assert lz >= eg, "lazy admitted less concurrency than eager"
 
 
 if __name__ == "__main__":

@@ -156,6 +156,45 @@ def kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> float:
     return total
 
 
+def kv_token_bytes(cfg: ModelConfig) -> float:
+    """Ring-cache bytes ONE stream commits per context token (the slope of
+    ``kv_cache_bytes`` in ``seq_len`` below the window cap)."""
+    itemsize = 2  # bf16
+    total = 0.0
+    for lt in cfg.layer_types():
+        if lt == "attn":
+            total += 2 * cfg.n_kv_heads * cfg.head_dim * itemsize
+    return total
+
+
+def kv_state_bytes(cfg: ModelConfig) -> float:
+    """Per-stream decode-state bytes with NO token dependence (recurrent /
+    SSD states, enc-dec cross-attention KV) — the intercept of
+    ``kv_cache_bytes``."""
+    total = 0.0
+    for lt in cfg.layer_types():
+        if lt == "rec":
+            total += cfg.lru_width * 4
+        elif lt == "ssd":
+            total += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    if cfg.family == "encdec":
+        total += 2 * cfg.dec_layers * 4096 * cfg.n_kv_heads * cfg.head_dim * 2
+    return total
+
+
+def prefill_chunk_bytes(cfg: ModelConfig, chunk_tokens: int,
+                        max_len: int = 0) -> float:
+    """Byte-accurate transient footprint of ONE chunked-prefill step: the
+    ring KV written for ``chunk_tokens`` new tokens plus the per-stream
+    state carried between chunks.  This bounds the outside-the-pool prefill
+    buffer regardless of prompt length — the number to compare against the
+    ``kv_cache_bytes(prompt)`` single-stream cache that whole-prompt
+    prefill materializes before scattering."""
+    if max_len:
+        chunk_tokens = min(chunk_tokens, max_len)
+    return chunk_tokens * kv_token_bytes(cfg) + kv_state_bytes(cfg)
+
+
 # ---------------------------------------------------------------------------
 # Full step cost
 # ---------------------------------------------------------------------------

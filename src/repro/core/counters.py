@@ -35,6 +35,13 @@ class StepSample:
     kv_occupancy: float = 0.0
     kv_parks: float = 0.0
     kv_blocks_migrated: float = 0.0
+    # Continuous-batching loop health: pages committed lazily as streams
+    # crossed a page boundary, streams parked MID-DECODE on domain
+    # exhaustion, and prefill chunks processed — all deltas since the
+    # previous sample.
+    kv_lazy_grows: float = 0.0
+    kv_mid_decode_parks: float = 0.0
+    prefill_chunks: float = 0.0
 
 
 class PerfCounters:
@@ -61,7 +68,10 @@ class PerfCounters:
     def record_step(self, *, step_time: float, local_bytes: float = 0.0,
                     remote_bytes: float = 0.0, dcn_bytes: float = 0.0,
                     flops: float = 0.0, kv_occupancy: float = 0.0,
-                    kv_parks: float = 0.0, kv_blocks_migrated: float = 0.0):
+                    kv_parks: float = 0.0, kv_blocks_migrated: float = 0.0,
+                    kv_lazy_grows: float = 0.0,
+                    kv_mid_decode_parks: float = 0.0,
+                    prefill_chunks: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -70,7 +80,8 @@ class PerfCounters:
         self.samples.append(StepSample(self._clock(), step_time, local_bytes,
                                        remote_bytes, dcn_bytes, flops,
                                        kv_occupancy, kv_parks,
-                                       kv_blocks_migrated))
+                                       kv_blocks_migrated, kv_lazy_grows,
+                                       kv_mid_decode_parks, prefill_chunks))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

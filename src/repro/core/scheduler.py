@@ -102,7 +102,11 @@ class GlobalScheduler:
                 kv_occupancy=step_metrics.get("kv_occupancy", 0.0),
                 kv_parks=step_metrics.get("kv_parks", 0.0),
                 kv_blocks_migrated=step_metrics.get("kv_blocks_migrated",
-                                                    0.0))
+                                                    0.0),
+                kv_lazy_grows=step_metrics.get("kv_lazy_grows", 0.0),
+                kv_mid_decode_parks=step_metrics.get("kv_mid_decode_parks",
+                                                     0.0),
+                prefill_chunks=step_metrics.get("prefill_chunks", 0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()
@@ -123,20 +127,27 @@ class GlobalScheduler:
     def run_until_done(self, *, max_rounds: int = 10_000_000,
                        concurrency_trace: Optional[List[int]] = None,
                        metrics_fn: Optional[Callable[[], Dict[str, float]]]
-                       = None) -> int:
+                       = None,
+                       round_hook: Optional[Callable[[], None]] = None) -> int:
         """Tick until the task runtime drains; returns rounds used.
 
         Unlike ``TaskRuntime.run``, the controller fires *during* the run,
         so relayout handlers may migrate state (and spawn replacement
         coroutines) mid-flight.  ``metrics_fn`` — when given — supplies the
         per-round ``step_metrics`` dict fed to the profiler (e.g. the
-        serving engine's KV-pool gauges).
+        serving engine's KV-pool gauges).  ``round_hook`` — when given — is
+        called after every tick, at a point where all coroutines sit at
+        yield boundaries; the serving engine uses it to watch for
+        allocation stalls (every stream BLOCK-parked on pool growth) and
+        break them, something no single coroutine can observe from inside.
         """
         rounds = 0
         while self.tasks.pending() and rounds < max_rounds:
             self.tick(step_metrics=metrics_fn() if metrics_fn else None)
             if concurrency_trace is not None:
                 concurrency_trace.append(self.last_active)
+            if round_hook is not None:
+                round_hook()
             rounds += 1
         if self.tasks.pending():
             raise RuntimeError("GlobalScheduler.run_until_done exceeded "

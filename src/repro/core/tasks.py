@@ -160,17 +160,24 @@ class WaitQueue:
     re-enqueues parked tasks via ``TaskRuntime.unblock`` in FIFO order.
     """
 
-    def __init__(self, runtime: "TaskRuntime"):
+    def __init__(self, runtime: "TaskRuntime", clock=time.monotonic):
         self._rt = runtime
+        self._clock = clock
         self._q: "collections.OrderedDict[int, Task]" = collections.OrderedDict()
+        self._parked_at: Dict[int, float] = {}
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def __contains__(self, task: Task) -> bool:
+        return task.id in self._q
 
     def park(self, task: Task):
         """Join the wait line (idempotent: re-parking a task already in the
         line keeps its position, so a woken task that fails its retry and
         parks again has not lost its turn)."""
+        if task.id not in self._q:
+            self._parked_at[task.id] = self._clock()
         self._q[task.id] = task
 
     def remove(self, task: Task):
@@ -179,6 +186,28 @@ class WaitQueue:
         keeps grants FIFO: new arrivals check ``len(queue)`` and a
         woken-but-not-yet-granted head still counts."""
         self._q.pop(task.id, None)
+        self._parked_at.pop(task.id, None)
+
+    def parked_since(self, task: Task) -> Optional[float]:
+        """Clock time at which ``task`` first joined the line (survives
+        wake/re-park cycles), or None if it is not in the line."""
+        return self._parked_at.get(task.id)
+
+    def oldest(self) -> Optional[Task]:
+        """The longest-parked task — the one a free is granted to first."""
+        for t in self._q.values():
+            return t
+        return None
+
+    def youngest(self) -> Optional[Task]:
+        """The most-recently-parked task — the back of the line.  (Note:
+        the serving engine's eviction watchdog picks its victim from its
+        own mid-decode park records, NOT from this line, which also holds
+        admission tasks that hold no resources worth reclaiming.)"""
+        out = None
+        for t in self._q.values():
+            out = t
+        return out
 
     def wake(self, n: Optional[int] = None) -> int:
         """Wake the first ``n`` parked tasks (all when n is None) without

@@ -299,6 +299,19 @@ def make_serve_step(cfg: ModelConfig, gather_specs=None):
     return serve_step
 
 
+def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None):
+    """(params, cache, tokens (B,C), pos, n_tokens[, extras]) ->
+    (last-active-token logits, cache').  The continuous-batching mixed
+    step: prefill chunks and decode streams share one batched call with
+    per-stream lengths (``spec`` is the cache's ``CacheViewSpec``)."""
+
+    def serve_chunk_step(params, cache, tokens, pos, n_tokens, extras=None):
+        return dec.chunk_decode_step(params, cfg, spec, cache, tokens, pos,
+                                     n_tokens, extras)
+
+    return serve_chunk_step
+
+
 def make_generate(cfg: ModelConfig, steps: int, temperature: float = 0.0):
     """Greedy/temperature loop over serve_step (used by examples/serving)."""
     serve_step = make_serve_step(cfg)

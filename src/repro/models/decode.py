@@ -242,6 +242,55 @@ def copy_pool_entries(pool, spec: CacheViewSpec, src_blocks, dst_blocks,
     return jax.tree.unflatten(spec.treedef, out)
 
 
+def select_streams(spec: CacheViewSpec, mask, new_cache, old_cache):
+    """Per-stream cache select: leaves of ``new_cache`` where ``mask`` (B,)
+    is True, ``old_cache`` elsewhere — broadcast along each leaf's stream
+    axis from ``spec``.  This is what makes a masked multi-token step exact:
+    an inactive stream's cache (and ring write pointer) passes through
+    bit-unchanged, so a decode stream inside a mixed prefill/decode chunk
+    computes exactly what a plain single-token step would."""
+    out = []
+    for ln, lo, s in zip(jax.tree.leaves(new_cache),
+                         jax.tree.leaves(old_cache), spec.leaves):
+        shape = [1] * ln.ndim
+        shape[s.batch_axis] = mask.shape[0]
+        out.append(jnp.where(mask.reshape(shape), ln, lo))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
+                      tokens, pos, n_tokens, extras=None):
+    """One continuous-batching tick: every stream consumes UP TO C tokens.
+
+    tokens: (B, C) int32 — stream i's next ``n_tokens[i]`` tokens (prefill
+    chunks put a prompt slice here, decode streams put [last_token, ...]);
+    pos: (B,) absolute position of tokens[:, 0]; n_tokens: (B,) in [0, C]
+    (0 = idle slot: nothing is computed into its cache).
+
+    Scans ``decode_step`` over the chunk axis with per-stream masking, so a
+    stream's math is bit-identical to feeding its tokens one per tick —
+    mixing prefill chunks with single-token decode streams in ONE batched
+    model step is then purely a scheduling decision.  Returns
+    (logits (B, V) after each stream's LAST active token, new cache).
+    """
+    B, C = tokens.shape
+    logits0 = jnp.zeros((B, cfg.vocab), jnp.float32)
+
+    def body(carry, t):
+        cache, pos_c, logits = carry
+        active = t < n_tokens
+        tok = lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)   # (B, 1)
+        lg, new_cache = decode_step(params, cfg, cache, tok, pos_c, extras)
+        cache = select_streams(spec, active, new_cache, cache)
+        logits = jnp.where(active[:, None], lg, logits)
+        pos_c = pos_c + active.astype(pos_c.dtype)
+        return (cache, pos_c, logits), None
+
+    (cache, _, logits), _ = lax.scan(
+        body, (cache, pos, logits0), jnp.arange(C))
+    return logits, cache
+
+
 # ---------------------------------------------------------------------------
 # Single-token decode layers
 # ---------------------------------------------------------------------------

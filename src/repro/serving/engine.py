@@ -1,13 +1,23 @@
-"""Serving engine: continuous batching over chiplet-group replicas, running
-on the unified GlobalScheduler substrate with a paged, chiplet-aware KV
-allocator.
+"""Serving engine: a continuous-batching TOKEN loop over chiplet-group
+replicas, running on the unified GlobalScheduler substrate with an elastic,
+paged, chiplet-aware KV allocator.
 
 ARCAS mapping (the paper's runtime, applied to inference):
   * every request is a COROUTINE: an admission task that reserves KV pages
     from its replica's chiplet-group memory domain — parking via ``yield
     BLOCK`` when the pool is exhausted and woken by the pool's free
-    callback (allocation failure IS the back-pressure mechanism) — then one
-    batched decode step per engine round inside its group's coroutine;
+    callback (allocation failure IS the back-pressure mechanism);
+  * every engine tick builds ONE batched model step whose streams are a mix
+    of prefill CHUNKS (page-sized slices of prompts scattered into the pool
+    page-by-page, so prefill memory is bounded by one chunk regardless of
+    prompt length) and single-token decode streams — there is no separate
+    prefill phase, just streams at different positions in one loop;
+  * KV reservations are ELASTIC: admission takes only the pages of the
+    first chunk plus the state slot, and the table GROWS lazily as ``pos``
+    crosses page boundaries.  When a stream's domain is exhausted MID-
+    DECODE it parks — suspend at a defined point, resume wherever capacity
+    appears — via the same ``yield BLOCK`` / free-callback path admission
+    uses, releasing its decode slot to other streams while it waits;
   * KV cache is PAGED (``serving/kvpool.py``): a block pool partitioned per
     chiplet-group domain; a request holds a block table, not a slot in a
     monolithic per-replica array, so short requests reserve only the pages
@@ -19,22 +29,35 @@ ARCAS mapping (the paper's runtime, applied to inference):
   * waiting requests are WORK-STOLEN between replica queues in §4.4 tier
     order (own queue -> neighborhood -> pod -> fleet) via TieredQueues; a
     steal migrates the request's KV reservation into the thief's domain
-    (memory follows work — the NUMA-bind discipline);
+    (memory follows work — the NUMA-bind discipline), partially-grown
+    tables included;
   * the adaptive controller runs LIVE: on a spread-rate change the engine's
     RelayoutHandler rebuilds replica groups MID-RUN — in-flight streams
-    keep their pool pages and only re-point their block tables at the new
-    owner replica of their domain; streams rebalanced onto a non-owner
-    replica copy just their *used* pages between domains (never whole
-    cache slices), so adaptive and non-adaptive runs generate identical
-    tokens;
+    (mid-prefill or mid-decode) keep their pool pages and only re-point
+    their block tables at the new owner replica of their domain; streams
+    rebalanced onto a non-owner replica copy just their *used* pages
+    between domains (never whole cache slices), so adaptive and
+    non-adaptive runs generate identical tokens;
+  * incremental allocation can deadlock (every stream in a domain holding
+    pages and needing one more); a ``round_hook`` on the scheduler watches
+    for allocation stalls and EVICTS the most-recently-parked stream —
+    its pages are freed to the longest-parked waiter and the evicted
+    request re-runs from scratch, which under greedy decoding regenerates
+    the identical tokens;
   * an open-loop client coroutine (``open_loop_client``) shares the same
     TaskRuntime and submits requests over time from a seeded schedule, so
     steady-state adaptation and TTFT/TPOT tails are actually exercised.
 
+``EngineConfig(lazy=False)`` keeps the PR-2 eager allocator (full capped
+reservation at admission + whole-prompt prefill); ``paged=False`` keeps the
+PR-1 slot monolith.  Both ride the same token loop — their streams simply
+never have more than one token per tick — and stay token-identical to the
+lazy path.
+
 On this CPU container the model compute is real (tiny configs) while the
 replica groups are logical queues over the same device — the scheduling,
-batching, stealing, paging, controller and migration behavior is exactly
-the code a TPU deployment would run host-side.
+batching, stealing, paging, growth, controller and migration behavior is
+exactly the code a TPU deployment would run host-side.
 """
 from __future__ import annotations
 
@@ -56,7 +79,9 @@ from repro.core.tasks import BLOCK, WaitQueue
 from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
-from repro.launch.steps import make_prefill, make_serve_step
+from repro.core.costmodel import prefill_chunk_bytes
+from repro.launch.steps import make_prefill, make_serve_chunk_step, \
+    make_serve_step
 from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
 
 
@@ -96,10 +121,16 @@ class EngineConfig:
     adaptive: bool = True
     paged: bool = True                 # paged KV block pool (default) vs
                                        # the legacy slot-monolith cache
+    lazy: bool = True                  # elastic reservations + chunked
+                                       # prefill (False = PR-2 eager mode)
     block_tokens: int = 16             # ring tokens per KV page
+    prefill_chunk: Optional[int] = None  # prompt tokens per prefill chunk;
+                                         # default: one KV page
     pool_streams: Optional[int] = None  # per-DOMAIN budget, expressed as
                                         # full-length streams (monolith
                                         # equivalence); default max_batch
+    stall_evict_rounds: int = 6        # allocation-stall rounds before the
+                                       # deadlock breaker evicts a stream
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -107,13 +138,28 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class _InFlight:
-    """A mid-generation stream harvested from a retired replica group.
-    ``cache`` carries the KV slice only in legacy (slot-monolith) mode; in
-    paged mode the KV stays in the pool and only the table pointer moves."""
+    """A mid-generation stream harvested from a retired replica group (or
+    a mid-decode park).  ``cache`` carries the KV slice only in legacy
+    (slot-monolith) mode; in paged mode the KV stays in the pool and only
+    the table pointer moves.  ``pos`` < len(prompt) means the stream was
+    harvested mid-PREFILL: it resumes at the next chunk boundary."""
     req: Request
     cache: Any
     pos: int
     token: int
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A stream suspended MID-DECODE because its domain could not grow its
+    table.  It holds its pages (and its place in the engine's FIFO wait
+    line) but not a decode slot; ``_regrow_task`` resumes it."""
+    req: Request
+    pos: int
+    token: int
+    seq: int                            # park order (eviction prefers max)
+    cell: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    evicted: bool = False
 
 
 class _Group:
@@ -123,7 +169,9 @@ class _Group:
     ``queue`` is the group's deque inside the engine's TieredQueues;
     ``resume`` holds migrated in-flight streams awaiting a free slot;
     ``retired`` marks groups dissolved by a relayout (their coroutine exits
-    at its next yield point).
+    at its next yield point).  ``pos_h``/``tok_h`` are the host-side view
+    of every slot's stream cursor: absolute position of the next token to
+    process and the last emitted token.
     """
 
     def __init__(self, gid: int, pod: int, cfg: ModelConfig, params,
@@ -140,8 +188,8 @@ class _Group:
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.cache = (None if ecfg.paged
                       else dec.init_cache(cfg, ecfg.max_batch, ecfg.max_len))
-        self.pos = jnp.zeros((ecfg.max_batch,), jnp.int32)
-        self.tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
+        self.pos_h = np.zeros((ecfg.max_batch,), np.int32)
+        self.tok_h = np.zeros((ecfg.max_batch,), np.int32)
         self.steps = 0
 
     def free_slots(self) -> List[int]:
@@ -181,6 +229,11 @@ class ServeEngine:
         self.submitted: List[Request] = []
         self.relayouts: List[Dict] = []
         self.pool: Optional[KVBlockPool] = None
+        self._lazy = ecfg.paged and ecfg.lazy
+        self._parked: Dict[int, _Parked] = {}
+        self._park_seq = itertools.count()
+        self._progress_mark = -1.0
+        self._stall_rounds = 0
         if ecfg.paged:
             streams = ecfg.pool_streams or ecfg.max_batch
             budget = KVBlockPool.blocks_for_streams(
@@ -201,8 +254,17 @@ class ServeEngine:
                                            donate_argnums=(0,))
             ml = ecfg.max_len
             self._kv_fn = lambda n: kv_bytes_exact(cfg, n, ml)
+            # prefill chunk: one KV page by default (ring models), the
+            # configured page size for pure-state models (no ring pages)
+            self._chunk = ecfg.prefill_chunk or (
+                self.pool.block_tokens if self.pool.pages_per_stream
+                else ecfg.block_tokens)
+            if self._lazy:
+                self._paged_chunk = jax.jit(self._make_paged_chunk(),
+                                            donate_argnums=(1,))
         else:
             self._kv_fn = None
+            self._chunk = 1
         self._build_groups()
         self.sched.register_relayout(self._relayout)
 
@@ -245,7 +307,7 @@ class ServeEngine:
                       key=lambda d: (-self.pool.free_blocks(d),
                                      -self.pool.free_states(d), d))
 
-    def _try_admit(self, total_tokens: int
+    def _try_admit(self, total_tokens: int, first_tokens: Optional[int]
                    ) -> Tuple[Optional["_Group"], Optional[KVTable]]:
         """Sweep every group (least-pressured first) and every domain it
         owns; one logical alloc failure only when the whole pool is dry."""
@@ -253,6 +315,7 @@ class ServeEngine:
                                                      len(gr.queue), gr.gid)):
             for d in self._domain_order(g):
                 table = self.pool.reserve(d, total_tokens,
+                                          first_tokens=first_tokens,
                                           count_failure=False)
                 if table is not None:
                     return g, table
@@ -283,27 +346,33 @@ class ServeEngine:
         cell["task"] = self.sched.spawn(
             self._admission_task(req, cell), name=f"admit{req.rid}",
             priority=1)
+        # join the FIFO wait line AT SUBMIT TIME: grant order is submission
+        # order, not coroutine execution order (workers pop LIFO, so a
+        # burst of arrivals would otherwise be admitted newest-first — and
+        # could starve a stream parked mid-decode before they arrived)
+        self.waiters.park(cell["task"])
         return req
 
     def _admission_task(self, req: Request, cell: Dict[str, Any]):
         """Per-request coroutine: reserve KV pages, sweeping groups by
         pressure; park on pool exhaustion until a free wakes us.
 
-        Grants are FIFO: an arrival finding a wait line joins its back,
-        waiters stay in the line until their reservation is GRANTED, and a
-        successful admission cascades the wake to the next waiter (frees
-        wake exactly one task)."""
+        Grants are FIFO across admissions AND mid-decode growers: every
+        admission is in the wait line from submit time and only the line
+        HEAD attempts a reservation, waiters stay in the line until their
+        reservation is GRANTED, and a successful admission cascades the
+        wake to the next waiter (frees wake exactly one task)."""
         total = len(req.prompt) + req.max_new
-        if len(self.waiters):           # earlier parked admissions first
-            self.waiters.park(cell["task"])
-            yield BLOCK
+        # lazy: only the first chunk's pages are committed at admission
+        first = (min(self._chunk, max(1, len(req.prompt)))
+                 if self._lazy else None)
         while True:
-            g, table = self._try_admit(total)
+            if self.waiters.oldest() is not cell["task"]:
+                yield BLOCK             # not our turn: the grant cascade
+                continue                # (or a free) will wake the head
+            g, table = self._try_admit(total, first)
             if table is not None:
                 break
-            # stay in the wait line until GRANTED (not merely woken), so a
-            # new arrival can never jump a woken head whose retry is pending
-            self.waiters.park(cell["task"])
             yield BLOCK                 # woken by KVBlockPool.free
         self.waiters.remove(cell["task"])
         self.waiters.wake(1)            # maybe the next waiter fits too
@@ -341,7 +410,11 @@ class ServeEngine:
             return
         # harvest in-flight streams and queued requests from the dissolving
         # groups; in paged mode KV stays in the pool (tables move, data
-        # does not — except used pages of rebalanced streams)
+        # does not — except used pages of rebalanced streams).  Streams
+        # harvested mid-prefill carry just their position: their next chunk
+        # resumes on the new owner.  Mid-decode PARKED streams need no
+        # harvesting at all — their regrow task re-resolves the owner group
+        # of their domain when it wakes.
         inflight: List[_InFlight] = []
         queued: List[Request] = []
         mig0 = self.counters.totals.get("kv_blocks_migrated", 0.0)
@@ -354,8 +427,8 @@ class ServeEngine:
                     one = None
                 else:
                     one = jax.tree.map(lambda p: p[:, slot], g.cache)
-                inflight.append(_InFlight(req, one, int(g.pos[slot]),
-                                          int(g.tokens[slot, 0])))
+                inflight.append(_InFlight(req, one, int(g.pos_h[slot]),
+                                          int(g.tok_h[slot])))
                 g.slots[slot] = None
                 # counted per slot-harvest so each migration pairs with
                 # exactly one restore; resume-backlog streams below were
@@ -422,6 +495,22 @@ class ServeEngine:
 
         return paged_decode
 
+    def _make_paged_chunk(self):
+        """The continuous-batching mixed step: prefill chunks and decode
+        streams share one gather -> chunked-masked step -> scatter."""
+        spec = self.pool.spec
+        step = make_serve_chunk_step(self.cfg, spec)
+
+        def paged_chunk(params, storage, tables, state_slots, tokens, pos,
+                        n_tokens):
+            view = dec.gather_cache_view(storage, spec, tables, state_slots)
+            logits, view = step(params, view, tokens, pos, n_tokens)
+            storage = dec.scatter_cache_view(storage, spec, tables,
+                                             state_slots, view)
+            return logits, storage
+
+        return paged_chunk
+
     def _make_commit_prefill(self):
         spec = self.pool.spec
 
@@ -432,7 +521,9 @@ class ServeEngine:
         return commit
 
     def _table_row(self, req: Optional[Request]) -> Tuple[List[int], int]:
-        """Null-padded (pages, state_slot) row for the gather indices."""
+        """Null-padded (pages, state_slot) row for the gather indices.
+        Partially-grown tables pad their unallocated tail with the null
+        block — those ring positions are past ``pos`` and never read."""
         P = self.pool.pages_per_stream
         if req is None or req.table is None:
             return [0] * P, 0
@@ -446,7 +537,126 @@ class ServeEngine:
             np.asarray(rows, np.int32).reshape(len(g.slots), P))
         return tables, jnp.asarray(np.asarray(slots, np.int32))
 
-    # -- one engine tick: admit + prefill + batched decode --------------------
+    # -- elastic growth / mid-decode parking ---------------------------------
+    def _next_chunk_need(self, req: Request, pos: int) -> Tuple[int, int]:
+        """(tokens the stream consumes next tick, pages its table is short
+        by) — the single definition both the tick's growth phase and a
+        parked stream's regrow retry must agree on."""
+        S = len(req.prompt)
+        n = min(self._chunk, S - pos) if pos < S else 1
+        need = self.pool.pages_needed(pos + n) - len(req.table.blocks)
+        return n, need
+
+    def _grow_stream(self, req: Request, g: _Group, need: int) -> bool:
+        """Commit ``need`` more pages for a stream: its own domain first,
+        then any domain its replica group owns (migrating the used pages —
+        memory follows the stream's placement, never the reverse)."""
+        if self.pool.grow(req.table, need):
+            return True
+        t = req.table
+        for d in self._domain_order(g):
+            if d == t.domain:
+                continue
+            if self.pool.free_blocks(d) < len(t.blocks) + need:
+                continue
+            if self.pool.migrate(t, d) and self.pool.grow(t, need):
+                return True
+        return False
+
+    def _park_stream(self, g: _Group, slot: int):
+        """Suspend a stream MID-DECODE: it keeps its pages but releases its
+        decode slot, joins the engine's FIFO wait line (ahead of any
+        later-arriving admission) and resumes via the pool free callback."""
+        req = g.slots[slot]
+        g.slots[slot] = None
+        rec = _Parked(req, int(g.pos_h[slot]), int(g.tok_h[slot]),
+                      next(self._park_seq))
+        self._parked[req.rid] = rec
+        self.counters.add("kv_mid_decode_parks", 1)
+        rec.cell["task"] = self.sched.spawn(
+            self._regrow_task(rec), name=f"regrow{req.rid}", priority=1)
+        # join the line NOW (synchronously): a request admitted after this
+        # park must queue behind it — mid-decode streams cannot be starved
+        # by newcomers (grants are FIFO by park order)
+        self.waiters.park(rec.cell["task"])
+
+    def _regrow_task(self, rec: _Parked):
+        """Waiter coroutine for a mid-decode parked stream: retry growth
+        when it reaches the head of the line (same discipline as
+        admission, so grants stay FIFO across admissions AND growers); on
+        grant, hand the stream back to the owner group of its (possibly
+        migrated) domain."""
+        req = rec.req
+        while True:
+            if rec.evicted:
+                return
+            if self.waiters.oldest() is not rec.cell["task"]:
+                yield BLOCK             # not our turn: the grant cascade
+                continue                # (or a free) will wake the head
+            g = self._owner_group(req.table.domain)
+            _, need = self._next_chunk_need(req, rec.pos)
+            if self._grow_stream(req, g, max(need, 0)):
+                break
+            yield BLOCK                 # woken by KVBlockPool.free
+        self.waiters.remove(rec.cell["task"])
+        self.waiters.wake(1)            # maybe the next waiter fits too
+        self._parked.pop(req.rid, None)
+        req.group = g.gid
+        g.resume.append(_InFlight(req, None, rec.pos, rec.token))
+        return
+
+    # -- allocation-stall watchdog (the incremental-allocation deadlock) -----
+    def _progress_signature(self) -> float:
+        t = self.counters.totals
+        return (t.get("tokens_processed", 0.0)
+                + t.get("kv_reservations", 0.0)
+                + t.get("kv_lazy_grows", 0.0)
+                + t.get("kv_blocks_freed", 0.0))
+
+    def _stall_hook(self):
+        """Called by the scheduler after every round.  If nothing has made
+        progress for ``stall_evict_rounds`` rounds while streams sit parked
+        holding pages, the classic incremental-allocation deadlock has
+        closed: break it by evicting the MOST-RECENTLY-parked stream (it
+        loses the least work and nobody behind it in the line exists)."""
+        if self.pool is None:
+            return
+        sig = self._progress_signature()
+        if sig != self._progress_mark:
+            self._progress_mark = sig
+            self._stall_rounds = 0
+            return
+        self._stall_rounds += 1
+        if self._stall_rounds >= self.ecfg.stall_evict_rounds \
+                and self._parked:
+            self._evict_youngest()
+            self._stall_rounds = 0
+
+    def _evict_youngest(self):
+        """Deadlock breaker: free the most-recently-parked stream's pages
+        (granting them to the LONGEST-parked waiter via the free callback)
+        and restart it from scratch — greedy decoding regenerates the
+        identical tokens, so eviction is invisible in the output."""
+        rec = max(self._parked.values(), key=lambda r: r.seq)
+        rec.evicted = True
+        self._parked.pop(rec.req.rid, None)
+        task = rec.cell.get("task")
+        if task is not None:
+            self.waiters.remove(task)
+            self.runtime.unblock(task)  # let the generator observe .evicted
+        req = rec.req
+        self.pool.free(req.table)       # wakes the longest-parked waiter
+        req.table = None
+        req.generated = []
+        req.t_first = None
+        self.counters.add("kv_evictions", 1)
+        cell: Dict[str, Any] = {}
+        cell["task"] = self.sched.spawn(
+            self._admission_task(req, cell), name=f"readmit{req.rid}",
+            priority=1)
+        self.waiters.park(cell["task"])  # back of the line: it had its turn
+
+    # -- one engine tick: admit + mixed chunk/decode token step ---------------
     def _install(self, g: _Group, slot: int, fl: _InFlight):
         """Re-slot a migrated stream.  Paged mode is pure bookkeeping (the
         KV never left the pool); legacy mode writes the carried slice."""
@@ -455,13 +665,14 @@ class ServeEngine:
                 lambda pool, one: pool.at[:, slot].set(one),
                 g.cache, fl.cache)
         g.slots[slot] = fl.req
-        g.pos = g.pos.at[slot].set(fl.pos)
-        g.tokens = g.tokens.at[slot, 0].set(fl.token)
+        g.pos_h[slot] = fl.pos
+        g.tok_h[slot] = fl.token
         self.counters.add("kv_slots_restored", 1)
 
     def _accept_steal(self, g: _Group):
         """TieredQueues accept hook: a stolen request's KV reservation must
-        move into the thief's memory domain (memory follows work)."""
+        move into the thief's memory domain (memory follows work).
+        Partially-grown tables move only their reserved pages."""
         def accept(req: Request, _tier: str) -> bool:
             if not self.ecfg.paged or req.table is None:
                 return True
@@ -478,12 +689,20 @@ class ServeEngine:
                 break
             if tier != "local":
                 req.group = g.gid
+            if self._lazy:
+                # the token loop prefills this stream chunk-by-chunk;
+                # admission just points a slot at position 0
+                g.slots[slot] = req
+                g.pos_h[slot] = 0
+                g.tok_h[slot] = 0
+                continue
             prompt = req.prompt[None, :]
             logits, cache1 = self._prefill(self.params, {"tokens": prompt})
             nxt = int(jnp.argmax(logits[0]))
             req.generated.append(nxt)
             req.t_first = self._clock()
             self.counters.add("prefills", 1)
+            self.counters.add("tokens_processed", len(req.prompt))
             if len(req.generated) >= req.max_new:
                 # prefill's token already met the budget (max_new=1):
                 # finish without ever taking a decode slot or pool pages
@@ -506,39 +725,100 @@ class ServeEngine:
                     lambda pool, one: pool.at[:, slot].set(one[:, 0]),
                     g.cache, cache1)
             g.slots[slot] = req
-            g.pos = g.pos.at[slot].set(len(req.prompt))
-            g.tokens = g.tokens.at[slot, 0].set(nxt)
+            g.pos_h[slot] = len(req.prompt)
+            g.tok_h[slot] = nxt
 
     def _decode_tick(self, g: _Group):
-        if not any(s is not None for s in g.slots):
+        """ONE batched model step for the group: every occupied slot
+        consumes its next tokens — a page-sized prompt chunk for streams
+        still in prefill, the last generated token for decode streams.
+        Lazy tables grow (or park their stream) before the step commits
+        any bytes."""
+        B = self.ecfg.max_batch
+        n_h = np.zeros((B,), np.int32)
+        chunked = False
+        for i in range(B):
+            req = g.slots[i]
+            if req is None:
+                continue
+            pos = int(g.pos_h[i])
+            if req.table is not None and self.ecfg.paged:
+                n, need = self._next_chunk_need(req, pos)
+                if (self._lazy and self.pool.pages_per_stream and need > 0
+                        and not self._grow_stream(req, g, need)):
+                    self._park_stream(g, i)
+                    continue
+            else:
+                S = len(req.prompt)
+                n = min(self._chunk, S - pos) if pos < S else 1
+            n_h[i] = n
+            chunked = chunked or n > 1
+        if not n_h.any():
             return
         if self.ecfg.paged:
             tables, slots1 = self._group_indices(g)
-            logits, self.pool.storage = self._paged_decode(
+        pos_j = jnp.asarray(g.pos_h)
+        # per-stream token feed: the next prompt slice for streams still in
+        # prefill (a final chunk may hold a single token), the last emitted
+        # token for decode streams
+        C = self._chunk if chunked else 1
+        toks = np.zeros((B, C), np.int32)
+        for i in range(B):
+            req = g.slots[i]
+            if req is None or not n_h[i]:
+                continue
+            pos = int(g.pos_h[i])
+            if pos < len(req.prompt):
+                toks[i, :n_h[i]] = req.prompt[pos:pos + n_h[i]]
+            else:
+                toks[i, 0] = g.tok_h[i]
+        if chunked:
+            logits, self.pool.storage = self._paged_chunk(
                 self.params, self.pool.storage, tables, slots1,
-                g.tokens, g.pos)
+                jnp.asarray(toks), pos_j, jnp.asarray(n_h))
         else:
-            logits, g.cache = self._decode(self.params, g.cache, g.tokens,
-                                           g.pos)
-        nxt = jnp.argmax(logits, axis=-1)
-        g.pos = g.pos + jnp.where(
-            jnp.array([s is not None for s in g.slots]), 1, 0)
-        g.tokens = nxt[:, None].astype(jnp.int32)
+            tokens = jnp.asarray(toks)
+            if self.ecfg.paged:
+                logits, self.pool.storage = self._paged_decode(
+                    self.params, self.pool.storage, tables, slots1,
+                    tokens, pos_j)
+            else:
+                logits, g.cache = self._decode(self.params, g.cache, tokens,
+                                               pos_j)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
         g.steps += 1
         now = self._clock()
-        for i, req in enumerate(g.slots):
-            if req is None:
+        for i in range(B):
+            req = g.slots[i]
+            if req is None or not n_h[i]:
                 continue
-            req.generated.append(int(nxt[i]))
+            S = len(req.prompt)
+            pos0 = int(g.pos_h[i])
+            new_pos = pos0 + int(n_h[i])
+            g.pos_h[i] = new_pos
+            self.counters.add("tokens_processed", int(n_h[i]))
+            if pos0 < S:
+                self.counters.add("prefill_chunks", 1)
+                if self.ecfg.paged:
+                    req.table.used_pages = min(
+                        len(req.table.blocks),
+                        self.pool.pages_needed(new_pos))
+                if new_pos < S:
+                    continue            # mid-prompt: no token emitted yet
+                req.t_first = now
+                self.counters.add("prefills", 1)
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            g.tok_h[i] = tok
             if self.ecfg.paged:
-                req.table.used_pages = self.pool.pages_needed(
-                    len(req.prompt) + len(req.generated))
+                req.table.used_pages = min(len(req.table.blocks),
+                                           self.pool.pages_needed(new_pos))
             if len(req.generated) >= req.max_new:
                 req.t_done = now
                 g.slots[i] = None
                 self._inflight -= 1
                 if self.ecfg.paged:
-                    self.pool.free(req.table)  # wakes parked admissions
+                    self.pool.free(req.table)  # wakes parked streams
         self.counters.add("decode_steps", 1)
         self.counters.add("decode_tokens",
                           sum(1 for s in g.slots if s is not None))
@@ -562,22 +842,21 @@ class ServeEngine:
         previous round (None in legacy slot-monolith mode)."""
         if self.pool is None:
             return None
-        state = {"t": self._clock(),
-                 "kv_alloc_failures": self.counters.totals.get(
-                     "kv_alloc_failures", 0.0),
-                 "kv_blocks_migrated": self.counters.totals.get(
-                     "kv_blocks_migrated", 0.0)}
+        names = ("kv_alloc_failures", "kv_blocks_migrated", "kv_lazy_grows",
+                 "kv_mid_decode_parks", "prefill_chunks")
+        state = {"t": self._clock()}
+        state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
         def metrics() -> Dict[str, float]:
             t1 = self._clock()
-            fails = self.counters.totals.get("kv_alloc_failures", 0.0)
-            mig = self.counters.totals.get("kv_blocks_migrated", 0.0)
+            cur = {n: self.counters.totals.get(n, 0.0) for n in names}
             out = {"step_time": t1 - state["t"],
                    "kv_occupancy": self.pool.occupancy(),
-                   "kv_parks": fails - state["kv_alloc_failures"],
-                   "kv_blocks_migrated": mig - state["kv_blocks_migrated"]}
-            state.update(t=t1, kv_alloc_failures=fails,
-                         kv_blocks_migrated=mig)
+                   "kv_parks": cur["kv_alloc_failures"]
+                   - state["kv_alloc_failures"]}
+            for n in names[1:]:
+                out[n] = cur[n] - state[n]
+            state.update(t=t1, **cur)
             return out
 
         return metrics
@@ -590,7 +869,8 @@ class ServeEngine:
                 self._spawn_group(g)
             self.sched.run_until_done(max_rounds=max_rounds,
                                       concurrency_trace=trace,
-                                      metrics_fn=self._round_metrics())
+                                      metrics_fn=self._round_metrics(),
+                                      round_hook=self._stall_hook)
         finally:
             self._running = False
         out = {"concurrency": trace, "counters": self.counters.snapshot(),
@@ -598,16 +878,22 @@ class ServeEngine:
                "decisions": [dataclasses.asdict(x)
                              for x in self.controller.decisions]}
         if self.pool is not None:
-            out["kv"] = self.pool.stats()
+            out["kv"] = self.kv_stats()
         return out
 
     # -- latency / pool stats --------------------------------------------------
     def kv_stats(self) -> Dict[str, float]:
-        """KV-pool health: occupancy, park (alloc-failure) rate,
-        blocks migrated per relayout."""
+        """KV-pool health: occupancy, park (alloc-failure) rate, lazy
+        growth / mid-decode park / eviction counts, blocks migrated per
+        relayout."""
         if self.pool is None:
             return {}
         s = self.pool.stats()
+        # the pool defaults this to one page; the engine knows the real
+        # configured chunk size (prefill_chunk may span several pages)
+        s["prefill_chunk_bytes"] = prefill_chunk_bytes(
+            self.cfg, self._chunk, self.ecfg.max_len)
+        s["evictions"] = self.counters.totals.get("kv_evictions", 0.0)
         s["blocks_per_relayout"] = [r.get("blocks_migrated", 0.0)
                                     for r in self.relayouts]
         return s

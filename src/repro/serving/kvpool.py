@@ -53,11 +53,18 @@ def kv_bytes_exact(cfg: ModelConfig, n_tokens: int, max_len: int) -> float:
 @dataclasses.dataclass
 class KVTable:
     """One stream's view into the pool: ring pages + state slot, resident
-    in a single chiplet-group domain."""
+    in a single chiplet-group domain.
+
+    Reservations are ELASTIC: a lazily-admitted table starts with the pages
+    of its first prefill chunk and :meth:`KVBlockPool.grow` appends pages
+    in ring order as the stream's ``pos`` crosses page boundaries, up to
+    ``cap_pages`` (the eager reservation the PR-2 allocator made up
+    front).  ``cap_pages == 0`` means fully reserved at admission."""
     domain: int
     blocks: List[int]               # reserved physical pages, ring order
     state_slot: int                 # 0 = none (model has no state leaves)
     used_pages: int = 0             # pages actually written (prefill/decode)
+    cap_pages: int = 0              # lazy mode: max pages this stream needs
 
     @property
     def n_blocks(self) -> int:
@@ -109,6 +116,11 @@ class KVBlockPool:
             block_tokens=self.block_tokens, max_len=max_len)
         self._on_free: List[Callable[[], None]] = []
         self.peak_used_blocks = 0
+        # per-domain high-water marks (blocks in use), so chunked prefill /
+        # lazy growth can report byte-accurate per-domain footprints
+        self.peak_used_per_domain = [0] * n_domains
+        self.active_tables = 0          # reservations currently live
+        self.peak_active_tables = 0     # max concurrently admitted streams
 
     # -- sizing helpers ----------------------------------------------------
     @staticmethod
@@ -166,6 +178,9 @@ class KVBlockPool:
         total = self.n_domains * self.blocks_per_domain
         return total - sum(len(f) for f in self._free_blocks)
 
+    def used_blocks_in(self, domain: int) -> int:
+        return self.blocks_per_domain - len(self._free_blocks[domain])
+
     def total_blocks(self) -> int:
         return self.n_domains * self.blocks_per_domain
 
@@ -186,18 +201,29 @@ class KVBlockPool:
 
     # -- alloc / free ------------------------------------------------------
     def reserve(self, domain: int, total_tokens: int, *,
+                first_tokens: Optional[int] = None,
                 count_failure: bool = True) -> Optional[KVTable]:
-        """Reserve a full table for a stream of ``total_tokens`` context in
+        """Reserve a table for a stream of ``total_tokens`` context in
         ``domain``; None when the domain cannot serve it right now.
+
+        With ``first_tokens`` the reservation is ELASTIC: only the pages
+        covering the first ``first_tokens`` positions are taken now (one
+        prefill chunk) and the table records ``cap_pages`` — the eager
+        footprint — as its growth bound for :meth:`grow`.  The budget check
+        still uses the CAP: a stream whose full ring cannot fit a domain
+        can never complete, lazily or not.
+
         ``count_failure=False`` lets a caller probing several domains count
         one logical failure instead of one per domain."""
-        pages = self.pages_needed(total_tokens)
-        if pages > max(self.blocks_per_domain, 0) and pages:
+        cap = self.pages_needed(total_tokens)
+        if cap > max(self.blocks_per_domain, 0) and cap:
             raise ValueError(
-                f"request needs {pages} pages but a domain only has "
+                f"request needs {cap} pages but a domain only has "
                 f"{self.blocks_per_domain}: raise the pool budget")
         if self.has_state and self.states_per_domain == 0:
             raise ValueError("pool has no state slots but model needs them")
+        pages = cap if first_tokens is None else \
+            min(cap, self.pages_needed(first_tokens))
         if not self.can_reserve(domain, pages):
             if count_failure:
                 self.counters.add("kv_alloc_failures", 1)
@@ -206,9 +232,35 @@ class KVBlockPool:
         slot = self._free_states[domain].pop() if self.has_state else 0
         self.counters.add("kv_blocks_allocated", pages)
         self.counters.add("kv_reservations", 1)
-        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks())
-        self._gauges()
-        return KVTable(domain, blocks, slot)
+        self.active_tables += 1
+        self.peak_active_tables = max(self.peak_active_tables,
+                                      self.active_tables)
+        self._note_usage(domain)
+        return KVTable(domain, blocks, slot,
+                       cap_pages=cap if first_tokens is not None else 0)
+
+    def grow(self, table: KVTable, n_pages: int) -> bool:
+        """Append ``n_pages`` ring pages to an elastic table (same domain),
+        committing bytes only when the stream's ``pos`` actually crosses a
+        page boundary.  False (no side effects) when the domain lacks free
+        pages — the caller parks its stream mid-decode and retries on the
+        pool's free callback."""
+        if n_pages <= 0:
+            return True
+        cap = table.cap_pages or self.pages_per_stream
+        if len(table.blocks) + n_pages > cap:
+            raise ValueError(
+                f"growing past the table's cap ({len(table.blocks)}+"
+                f"{n_pages} > {cap} pages)")
+        if len(self._free_blocks[table.domain]) < n_pages:
+            self.counters.add("kv_grow_failures", 1)
+            return False
+        table.blocks.extend(self._free_blocks[table.domain].pop()
+                            for _ in range(n_pages))
+        self.counters.add("kv_blocks_allocated", n_pages)
+        self.counters.add("kv_lazy_grows", 1)
+        self._note_usage(table.domain)
+        return True
 
     def free(self, table: KVTable):
         """Return a table's pages + state slot and fire the free callbacks
@@ -219,6 +271,7 @@ class KVBlockPool:
         self.counters.add("kv_blocks_freed", len(table.blocks))
         table.blocks = []
         table.used_pages = 0
+        self.active_tables -= 1
         self._gauges()
         for cb in self._on_free:
             cb()
@@ -257,28 +310,45 @@ class KVBlockPool:
         table.domain = new_domain
         table.blocks = new_blocks
         table.state_slot = new_slot
-        self._gauges()
+        self._note_usage(new_domain)
         for cb in self._on_free:      # the old domain gained capacity
             cb()
         return True
+
+    def _note_usage(self, domain: int):
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks())
+        self.peak_used_per_domain[domain] = max(
+            self.peak_used_per_domain[domain], self.used_blocks_in(domain))
+        self._gauges()
 
     def _gauges(self):
         self.counters.set("kv_pool_used_blocks", float(self.used_blocks()))
         self.counters.set("kv_pool_total_blocks", float(self.total_blocks()))
         self.counters.set("kv_pool_occupancy", self.occupancy())
+        self.counters.set("kv_active_tables", float(self.active_tables))
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         snap = self.counters.totals
         fails = snap.get("kv_alloc_failures", 0.0)
         grants = snap.get("kv_reservations", 0.0)
+        from repro.core.costmodel import prefill_chunk_bytes
         return {
             "occupancy": self.occupancy(),
             "peak_used_blocks": float(self.peak_used_blocks),
+            "peak_used_per_domain": [float(x)
+                                     for x in self.peak_used_per_domain],
+            "peak_active_tables": float(self.peak_active_tables),
             "total_blocks": float(self.total_blocks()),
             "alloc_failures": fails,
             "park_rate": fails / max(1.0, fails + grants),
             "blocks_migrated": snap.get("kv_blocks_migrated", 0.0),
             "tables_migrated": snap.get("kv_tables_migrated", 0.0),
+            "lazy_grows": snap.get("kv_lazy_grows", 0.0),
+            "grow_failures": snap.get("kv_grow_failures", 0.0),
+            "mid_decode_parks": snap.get("kv_mid_decode_parks", 0.0),
+            "prefill_chunks": snap.get("prefill_chunks", 0.0),
             "bytes_per_domain": self.domain_bytes(),
+            "prefill_chunk_bytes": prefill_chunk_bytes(
+                self.cfg, self.block_tokens, self.max_len),
         }

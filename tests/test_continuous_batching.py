@@ -1,0 +1,331 @@
+"""Continuous-batching token loop: chunked paged prefill + lazy page
+growth with mid-decode parking (ISSUE 3).
+
+The engine's three allocator modes must be interchangeable at the token
+level: LAZY (chunked prefill, elastic page growth, mid-decode parks and —
+under the incremental-allocation deadlock — evictions) vs EAGER (PR-2 full
+capped reservation + whole-prompt prefill) vs the PR-1 slot monolith
+(``paged=False``).  Everything here asserts that equivalence plus the
+mechanics that make lazy mode safe: FIFO fairness of the wait line,
+page-by-page commitment, and the stall watchdog."""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import REGISTRY, reduced_config
+from repro.core.topology import ChipletTopology
+from repro.serving.engine import EngineConfig, ServeEngine
+
+given, settings, st = hypothesis_tools()
+
+CFG = reduced_config(REGISTRY["llama3-8b"])
+
+
+def _run(prompts, max_new, *, lazy=True, paged=True, pool_streams=1,
+         max_batch=2, max_len=32, groups=2, client_sched=None,
+         adaptive=False, **ecfg_kw):
+    topo = ChipletTopology(n_pods=1, groups_per_pod=groups,
+                           chips_per_group=1)
+    ecfg = EngineConfig(max_batch=max_batch, max_len=max_len, paged=paged,
+                        lazy=lazy, pool_streams=pool_streams,
+                        adaptive=adaptive, **ecfg_kw)
+    eng = ServeEngine(CFG, topo, ecfg, spread_rate=1, seed=0)
+    reqs = [eng.submit(p, max_new=m) for p, m in zip(prompts, max_new)]
+    if client_sched is not None:
+        eng.open_loop_client(client_sched)
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted)
+    return eng, reqs, res
+
+
+# ---------------------------------------------------------------------------
+# token identity across allocator modes (property, conftest-fallback safe)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_lazy_eager_legacy_token_identity(seed):
+    """Random prompt/max_new mixes generate IDENTICAL tokens under lazy
+    paging (chunked prefill + growth + parks), eager paging and the legacy
+    monolith.  pool_streams=1 keeps the pool tight so long examples
+    really do park mid-decode and wrap the ring."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    prompts = [rng.integers(2, CFG.vocab, size=int(rng.integers(3, 28)))
+               for _ in range(n)]
+    max_new = [int(rng.integers(1, 20)) for _ in range(n)]
+    outs = {}
+    for mode, (lazy, paged) in {"lazy": (True, True),
+                                "eager": (False, True),
+                                "legacy": (False, False)}.items():
+        _, reqs, _ = _run(prompts, max_new, lazy=lazy, paged=paged)
+        outs[mode] = [r.generated for r in reqs]
+        assert all(len(g) == m for g, m in zip(outs[mode], max_new))
+    assert outs["lazy"] == outs["eager"] == outs["legacy"]
+
+
+def test_forced_mid_decode_park_token_identity():
+    """A stream that PARKS mid-decode (domain exhausted at a page
+    boundary) resumes via the pool free callback and still generates
+    exactly the eager run's tokens."""
+    rng = np.random.default_rng(0)
+    # one domain, 2 pages (max_len=32, bt=16).  The long request A (cap 2
+    # pages, admitted with 1 — admission grants are FIFO by submit order)
+    # shares the domain with a stream of one-page requests that keep the
+    # second page continuously occupied (each finish grants the next
+    # parked admission).  When A's pos crosses the page boundary the
+    # domain is exhausted and A parks mid-decode until a page frees.
+    prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(4)]
+    max_new = [24, 8, 8, 8]
+    eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1)
+    c = res["counters"]
+    assert c.get("kv_mid_decode_parks", 0) >= 1      # A really parked
+    assert c.get("kv_lazy_grows", 0) >= 1            # and grew on resume
+    assert c.get("kv_evictions", 0) == 0             # B's finish unblocked A
+    assert eng.pool.occupancy() == 0.0
+    _, reqs_e, _ = _run(prompts, max_new, lazy=False, groups=1)
+    assert [r.generated for r in reqs] == [r.generated for r in reqs_e]
+
+
+def test_mid_decode_park_fairness_over_new_admissions():
+    """Admission-order fairness (ISSUE 3 satellite): a stream parked
+    mid-decode joins the FIFO wait line at park time, so requests arriving
+    AFTER it queue behind it — the next free goes to the parked stream,
+    not a newcomer."""
+    rng = np.random.default_rng(1)
+    # A's prompt nearly fills its first page, so it parks a few decode
+    # ticks in (pos 16) while one-page B (alive for 12 generated tokens)
+    # holds the domain's second page.  C and D are submitted THE MOMENT A
+    # parks (tick spy) and must wait behind A in the line.
+    prompts = [rng.integers(2, CFG.vocab, size=s) for s in (14, 4, 4, 4)]
+    topo = ChipletTopology(n_pods=1, groups_per_pod=1, chips_per_group=1)
+    eng = ServeEngine(CFG, topo,
+                      EngineConfig(max_batch=2, max_len=32, pool_streams=1,
+                                   adaptive=False),
+                      spread_rate=1, seed=0)
+    a = eng.submit(prompts[0], max_new=10)
+    b = eng.submit(prompts[1], max_new=12)
+    orig_tick = eng._decode_tick
+
+    def spy(g):
+        if a.rid in eng._parked and len(eng.submitted) == 2:
+            eng.submit(prompts[2], max_new=4)
+            eng.submit(prompts[3], max_new=4)
+        orig_tick(g)
+
+    eng._decode_tick = spy
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted) and len(eng.submitted) == 4
+    c_req, d_req = eng.submitted[2], eng.submitted[3]
+    assert res["counters"].get("kv_mid_decode_parks", 0) >= 1
+    assert res["counters"].get("kv_evictions", 0) == 0
+    # C arrived while A sat parked...
+    assert c_req.arrived > a.t_first
+    assert c_req.arrived < a.t_done
+    # ...yet A finished before C or D were even granted pages (prefill
+    # implies a table): longest-parked-first granting
+    assert c_req.t_first >= a.t_done
+    assert d_req.t_first >= a.t_done
+
+
+def test_eviction_breaks_incremental_allocation_deadlock():
+    """Two streams each holding one page and each needing one more is the
+    classic incremental-allocation deadlock: the stall watchdog evicts the
+    most-recently-parked stream, its pages unblock the other, and the
+    evicted request restarts — with greedy decoding the final tokens are
+    identical to the eager (serialized) run."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(2)]
+    max_new = [26, 26]
+    eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1)
+    c = res["counters"]
+    assert c.get("kv_mid_decode_parks", 0) >= 2      # both parked
+    assert c.get("kv_evictions", 0) >= 1             # watchdog fired
+    assert eng.pool.occupancy() == 0.0
+    _, reqs_e, _ = _run(prompts, max_new, lazy=False, groups=1)
+    assert [r.generated for r in reqs] == [r.generated for r in reqs_e]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill mechanics
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_commits_page_by_page():
+    """A long prompt prefills in page-sized chunks THROUGH the pool: the
+    whole-prompt prefill path is never invoked, one chunk is processed per
+    tick, and pages are committed lazily as the prompt crosses page
+    boundaries — admission holds a single page."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(2, CFG.vocab, size=30)          # 2 pages of 16
+
+    def boom(*a, **k):
+        raise AssertionError("lazy engine must never whole-prompt prefill")
+
+    topo = ChipletTopology(n_pods=1, groups_per_pod=1, chips_per_group=1)
+    eng = ServeEngine(CFG, topo,
+                      EngineConfig(max_batch=1, max_len=32, pool_streams=1,
+                                   adaptive=False),
+                      spread_rate=1, seed=0)
+    eng._prefill = boom
+    admitted_pages = []
+    orig_tick = eng._decode_tick
+
+    def spy(g):
+        if g.slots[0] is not None and g.pos_h[0] == 0:
+            admitted_pages.append(len(g.slots[0].table.blocks))
+        orig_tick(g)
+
+    eng._decode_tick = spy
+    req = eng.submit(prompt, max_new=2)
+    res = eng.run_until_done()
+    assert req.done and len(req.generated) == 2
+    c = res["counters"]
+    assert c["prefill_chunks"] == 2                  # ceil(30 / 16)
+    assert c.get("kv_lazy_grows", 0) >= 1            # page 2 grown mid-prompt
+    assert admitted_pages == [1]                     # admission took 1 page
+    assert eng.pool.occupancy() == 0.0
+
+
+def test_max_new_one_in_lazy_mode():
+    """max_new=1 is satisfied by the last prefill chunk's logits — no
+    decode tick, pool drained at the end."""
+    rng = np.random.default_rng(4)
+    eng, reqs, _ = _run([rng.integers(2, CFG.vocab, size=20)], [1],
+                        lazy=True, groups=1)
+    assert len(reqs[0].generated) == 1
+    assert eng.pool.occupancy() == 0.0
+
+
+def test_single_token_final_chunk_token_identity():
+    """A prompt of chunk+1 tokens leaves a FINAL prefill chunk of exactly
+    one token, which rides the plain (non-chunked) step — it must feed the
+    prompt token, not the stale last-emitted token (regression: plen=17
+    diverged at the first generated token)."""
+    rng = np.random.default_rng(8)
+    for plen in (17, 33):
+        prompts = [rng.integers(2, CFG.vocab, size=plen)]
+        out = {}
+        for lazy in (True, False):
+            _, reqs, _ = _run(prompts, [4], lazy=lazy, groups=1,
+                              max_len=48)
+            out[lazy] = reqs[0].generated
+        assert out[True] == out[False], plen
+
+
+def test_lazy_relayout_migrates_partial_tables():
+    """Live relayout with streams mid-prefill and partially-grown tables:
+    adaptive and non-adaptive lazy runs stay token-identical (harvested
+    streams carry their chunk cursor; tables re-point or copy only used
+    pages)."""
+    from repro.core.controller import ControllerConfig
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, CFG.vocab, size=6) for _ in range(12)]
+    max_new = [2 if i % 4 == 0 else 10 for i in range(12)]
+
+    def run(adaptive):
+        return _run(prompts, max_new, lazy=True, groups=4, max_batch=1,
+                    pool_streams=4, adaptive=adaptive,
+                    controller=ControllerConfig(scheduler_timer=3,
+                                                threshold=1.0, min_dwell=1))
+
+    eng_a, reqs_a, res_a = run(True)
+    assert len(res_a["relayouts"]) >= 1
+    eng_b, reqs_b, res_b = run(False)
+    assert res_b["relayouts"] == []
+    assert [r.generated for r in reqs_a] == [r.generated for r in reqs_b]
+
+
+# ---------------------------------------------------------------------------
+# counters / stats surface + cost model
+# ---------------------------------------------------------------------------
+
+def test_new_counters_surface_in_kv_stats_and_samples():
+    """kv_lazy_grows / kv_mid_decode_parks / prefill_chunks reach the
+    engine's kv_stats AND the profiler's StepSample stream."""
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, CFG.vocab, size=20) for _ in range(2)]
+    eng, reqs, res = _run(prompts, [12, 12], lazy=True, groups=1,
+                          max_batch=2, pool_streams=2)
+    kv = eng.kv_stats()
+    for key in ("lazy_grows", "mid_decode_parks", "prefill_chunks",
+                "evictions", "peak_active_tables", "peak_used_per_domain",
+                "prefill_chunk_bytes"):
+        assert key in kv, key
+    assert kv["prefill_chunks"] >= 2
+    assert kv["lazy_grows"] >= 1
+    assert kv["prefill_chunk_bytes"] > 0
+    samples = eng.counters.samples
+    assert sum(s.prefill_chunks for s in samples) >= 2
+    assert sum(s.kv_lazy_grows for s in samples) >= 1
+    # per-domain watermark actually watched the one busy domain
+    assert max(kv["peak_used_per_domain"]) == kv["peak_used_blocks"]
+
+
+def test_prefill_chunk_bytes_costmodel():
+    """prefill_chunk_bytes = chunk * slope(kv_cache_bytes) + state bytes —
+    byte-accurate against the cost model for ring and pure-state models."""
+    from repro.configs.base import ShapeConfig
+    from repro.core.costmodel import (kv_cache_bytes, kv_state_bytes,
+                                      kv_token_bytes, prefill_chunk_bytes)
+    cfg = CFG
+    per_tok = kv_token_bytes(cfg)
+    assert per_tok > 0
+    s8 = kv_cache_bytes(cfg, ShapeConfig("kv", "decode", 8, 1), 1)
+    s16 = kv_cache_bytes(cfg, ShapeConfig("kv", "decode", 16, 1), 1)
+    assert s16 - s8 == pytest.approx(8 * per_tok)
+    assert prefill_chunk_bytes(cfg, 16) == \
+        pytest.approx(16 * per_tok + kv_state_bytes(cfg))
+    # a chunk never exceeds the ring
+    assert prefill_chunk_bytes(cfg, 64, max_len=16) == \
+        pytest.approx(16 * per_tok + kv_state_bytes(cfg))
+    ssm = reduced_config(REGISTRY["mamba2-780m"])
+    assert kv_token_bytes(ssm) == 0
+    assert prefill_chunk_bytes(ssm, 16) == pytest.approx(kv_state_bytes(ssm))
+
+
+def test_waitqueue_order_accessors():
+    """WaitQueue keeps first-park order across wake/re-park cycles and
+    exposes oldest/youngest + parked_since (used by the fairness path and
+    the eviction watchdog)."""
+    from repro.core.tasks import TaskRuntime, WaitQueue
+
+    def gen():
+        yield
+
+    rt = TaskRuntime(n_pods=1, groups_per_pod=1)
+    t = [0.0]
+    wq = WaitQueue(rt, clock=lambda: t[0])
+    a = rt.spawn(gen(), name="a")
+    b = rt.spawn(gen(), name="b")
+    t[0] = 1.0
+    wq.park(a)
+    t[0] = 2.0
+    wq.park(b)
+    assert a in wq and b in wq and len(wq) == 2
+    assert wq.oldest() is a and wq.youngest() is b
+    assert wq.parked_since(a) == 1.0
+    t[0] = 3.0
+    wq.park(a)                       # re-park: keeps position AND timestamp
+    assert wq.oldest() is a and wq.parked_since(a) == 1.0
+    wq.remove(a)
+    assert a not in wq and wq.oldest() is b
+    assert wq.parked_since(a) is None
+
+
+def test_lazy_admits_more_concurrency_than_eager_same_budget():
+    """The acceptance property at test scale: under a long-tail max_new
+    mix and one full-length stream of budget per domain, lazy admission
+    sustains strictly more concurrent reservations than eager."""
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(2, CFG.vocab, size=int(rng.integers(4, 14)))
+               for _ in range(8)]
+    max_new = [20 if i % 4 == 0 else 4 for i in range(8)]
+    peaks = {}
+    toks = {}
+    for mode in ("lazy", "eager"):
+        eng, reqs, _ = _run(prompts, max_new, lazy=(mode == "lazy"),
+                            groups=2, max_batch=4, pool_streams=1)
+        peaks[mode] = eng.pool.peak_active_tables
+        toks[mode] = [r.generated for r in reqs]
+    assert toks["lazy"] == toks["eager"]
+    assert peaks["lazy"] > peaks["eager"]
