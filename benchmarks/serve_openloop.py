@@ -1,7 +1,9 @@
 """Open-loop serving benchmark: Poisson-ish arrivals against the paged
 chiplet-aware KV allocator, comparing LAZY (chunked prefill + elastic page
 growth) against EAGER (full capped reservation at admission) for the same
-byte budget.
+byte budget — and, within lazy mode, SWAP-tier eviction (spill parked
+pages to host, resume mid-decode) against RESTART eviction (recompute from
+scratch, the PR-3 policy).
 
 A client coroutine on the engine's shared TaskRuntime submits requests over
 time from a seeded schedule (exponential inter-arrival gaps measured in
@@ -12,15 +14,22 @@ case page count at admission, while the lazy allocator commits one chunk's
 pages and grows as ``pos`` crosses page boundaries, parking mid-decode on
 exhaustion.  The benchmark reports the *admitted concurrency* (peak
 simultaneously-reserved streams) both ways, plus TTFT/TPOT tails, park /
-lazy-growth / eviction counts, and the per-chunk prefill footprint from
-``costmodel.prefill_chunk_bytes`` against the whole-prompt buffer eager
-prefill materializes.
+lazy-growth counts, spill/restore/eviction counts with the WASTED-
+RECOMPUTE metric (``recompute_tokens`` — the tokens restart eviction
+throws away, driven to 0 by the swap tier), and the per-chunk prefill
+footprint from ``costmodel.prefill_chunk_bytes``.
 
-    PYTHONPATH=src python benchmarks/serve_openloop.py                  # both
+The default run compares all three (lazy-swap / lazy-restart / eager) on
+one schedule and asserts token identity across them, ``recompute_tokens
+== 0`` in swap mode, and that every restart-mode eviction became a
+spill/restore cycle instead of recompute.
+
+    PYTHONPATH=src python benchmarks/serve_openloop.py                  # all 3
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked
     PYTHONPATH=src python benchmarks/serve_openloop.py --eager
     PYTHONPATH=src python benchmarks/serve_openloop.py --smoke          # CI
-    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked --smoke
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
+        --evict-mode swap --smoke                                       # CI
 """
 from __future__ import annotations
 
@@ -63,14 +72,15 @@ def longtail_schedule(seed: int, n: int, mean_gap: float,
     return out
 
 
-def run_mode(args, cfg, *, lazy: bool):
+def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap"):
     topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
     # max_batch is 2x the memory budget's stream count: the paged pool
     # admits by pages actually reserved, not worst-case slots
     max_batch = 2 * args.pool_streams
     ecfg = EngineConfig(
         max_batch=max_batch, max_len=args.max_len, adaptive=True, lazy=lazy,
-        pool_streams=args.pool_streams,
+        pool_streams=args.pool_streams, evict_mode=evict_mode,
+        headroom=args.headroom,
         controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
                                     min_dwell=2))
     eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
@@ -104,8 +114,14 @@ def report(mode: str, args, eng, res):
             f"lazy_grows={kv['lazy_grows']:.0f} "
             f"evictions={kv['evictions']:.0f} "
             f"unblocked={c.get('tasks_unblocked', 0):.0f}"),
+        row(f"openloop_recompute[{mode}]", kv["recompute_tokens"],
+            f"tokens thrown away by restart evictions; spills="
+            f"{kv['spills']:.0f} spilled_pages={kv['spilled_pages']:.0f} "
+            f"restores={kv['restores']:.0f} "
+            f"peak_spilled_bytes={kv['peak_spilled_bytes']:.0f}"),
         row(f"openloop_migration[{mode}]", kv["blocks_migrated"],
             f"tables_migrated={kv['tables_migrated']:.0f} "
+            f"spill_repoints={kv['spill_repoints']:.0f} "
             f"relayouts={len(res['relayouts'])}"),
     ])
     if mode == "lazy":
@@ -137,6 +153,14 @@ def main():
                          "elastic page growth)")
     ap.add_argument("--eager", action="store_true",
                     help="run ONLY the eager-reservation mode")
+    ap.add_argument("--evict-mode", choices=("swap", "restart"),
+                    default="swap",
+                    help="stall-watchdog policy for the lazy run: spill "
+                         "parked pages to the host tier (swap) or "
+                         "recompute from scratch (restart)")
+    ap.add_argument("--headroom", type=int, default=0,
+                    help="admission headroom k: grant only when the "
+                         "domain keeps k free blocks past the first chunk")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: few requests, fast")
     args = ap.parse_args()
@@ -145,22 +169,51 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
+    # (label, lazy, evict_mode): the default run compares swap-evict lazy
+    # against restart-evict lazy AND eager on the same schedule/budget
     modes = []
     if args.prefill_chunked or not args.eager:
-        modes.append("lazy")
+        modes.append(("lazy", True, args.evict_mode))
+    if not (args.prefill_chunked or args.eager):
+        other = "restart" if args.evict_mode == "swap" else "swap"
+        modes.append((f"{other}-evict", True, other))
     if args.eager or not args.prefill_chunked:
-        modes.append("eager")
+        modes.append(("eager", False, "swap"))
     runs = {}
-    for mode in modes:
-        eng, res = run_mode(args, cfg, lazy=(mode == "lazy"))
+    kvs = {}
+    for mode, lazy, evict in modes:
+        eng, res = run_mode(args, cfg, lazy=lazy, evict_mode=evict)
         report(mode, args, eng, res)
         runs[mode] = eng
-    if len(runs) == 2:
-        # same schedule, same byte budget: lazy must admit at least as much
-        # concurrency as eager and generate identical tokens
-        toks = {m: [e.generated for e in sorted(runs[m].submitted,
-                                                key=lambda r: r.rid)]
-                for m in runs}
+        kvs[mode] = eng.kv_stats()
+        if evict == "swap" and lazy:
+            # the CI gate: the swap tier must NEVER recompute a token
+            assert kvs[mode]["recompute_tokens"] == 0, \
+                f"[{mode}] swap mode recomputed " \
+                f"{kvs[mode]['recompute_tokens']:.0f} tokens"
+    toks = {m: [e.generated for e in sorted(runs[m].submitted,
+                                            key=lambda r: r.rid)]
+            for m in runs}
+    swap_mode = "lazy" if args.evict_mode == "swap" else "swap-evict"
+    restart_mode = "restart-evict" if args.evict_mode == "swap" else "lazy"
+    if swap_mode in runs and restart_mode in runs:
+        # same schedule, same budget: every restart eviction must become a
+        # spill/restore cycle — identical tokens, zero recompute
+        assert toks[swap_mode] == toks[restart_mode], \
+            "swap/restart token divergence"
+        sw, rs = kvs[swap_mode], kvs[restart_mode]
+        print(f"eviction thrash: restart={rs['evictions']:.0f} evictions "
+              f"({rs['recompute_tokens']:.0f} recomputed tokens) vs "
+              f"swap={sw['spills']:.0f} spills / {sw['restores']:.0f} "
+              f"restores ({sw['recompute_tokens']:.0f} recomputed); "
+              f"token-identical: True")
+        assert sw["evictions"] == 0, "swap mode fell back to restart"
+        if rs["evictions"]:
+            assert sw["spills"] > 0, \
+                "restart thrashed but swap mode never spilled"
+    if "lazy" in runs and "eager" in runs:
+        # lazy must admit at least as much concurrency as eager and
+        # generate identical tokens
         assert toks["lazy"] == toks["eager"], \
             "lazy/eager token divergence"
         lz = runs["lazy"].pool.peak_active_tables

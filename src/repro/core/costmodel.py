@@ -182,6 +182,17 @@ def kv_state_bytes(cfg: ModelConfig) -> float:
     return total
 
 
+def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
+                   with_state: bool = True) -> float:
+    """Host bytes ONE spilled stream parks in the swap tier: its used ring
+    pages (``pages`` pages of ``block_tokens`` tokens) plus its per-stream
+    state.  This is also the D2H+H2D traffic one spill/restore cycle costs
+    — the number to weigh against ``recompute`` FLOPs when deciding
+    whether swapping beats restart-eviction."""
+    return (pages * block_tokens * kv_token_bytes(cfg)
+            + (kv_state_bytes(cfg) if with_state else 0.0))
+
+
 def prefill_chunk_bytes(cfg: ModelConfig, chunk_tokens: int,
                         max_len: int = 0) -> float:
     """Byte-accurate transient footprint of ONE chunked-prefill step: the

@@ -42,6 +42,13 @@ class StepSample:
     kv_lazy_grows: float = 0.0
     kv_mid_decode_parks: float = 0.0
     prefill_chunks: float = 0.0
+    # Swap-tier eviction health: pages spilled to the host tier, spilled
+    # streams restored mid-decode, and tokens thrown away by restart
+    # evictions (the wasted-recompute metric the swap tier drives to 0) —
+    # deltas since the previous sample.
+    kv_spilled_pages: float = 0.0
+    kv_restores: float = 0.0
+    recompute_tokens: float = 0.0
 
 
 class PerfCounters:
@@ -71,7 +78,10 @@ class PerfCounters:
                     kv_parks: float = 0.0, kv_blocks_migrated: float = 0.0,
                     kv_lazy_grows: float = 0.0,
                     kv_mid_decode_parks: float = 0.0,
-                    prefill_chunks: float = 0.0):
+                    prefill_chunks: float = 0.0,
+                    kv_spilled_pages: float = 0.0,
+                    kv_restores: float = 0.0,
+                    recompute_tokens: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -81,7 +91,9 @@ class PerfCounters:
                                        remote_bytes, dcn_bytes, flops,
                                        kv_occupancy, kv_parks,
                                        kv_blocks_migrated, kv_lazy_grows,
-                                       kv_mid_decode_parks, prefill_chunks))
+                                       kv_mid_decode_parks, prefill_chunks,
+                                       kv_spilled_pages, kv_restores,
+                                       recompute_tokens))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

@@ -106,7 +106,10 @@ class GlobalScheduler:
                 kv_lazy_grows=step_metrics.get("kv_lazy_grows", 0.0),
                 kv_mid_decode_parks=step_metrics.get("kv_mid_decode_parks",
                                                      0.0),
-                prefill_chunks=step_metrics.get("prefill_chunks", 0.0))
+                prefill_chunks=step_metrics.get("prefill_chunks", 0.0),
+                kv_spilled_pages=step_metrics.get("kv_spilled_pages", 0.0),
+                kv_restores=step_metrics.get("kv_restores", 0.0),
+                recompute_tokens=step_metrics.get("recompute_tokens", 0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()

@@ -188,6 +188,17 @@ class WaitQueue:
         self._q.pop(task.id, None)
         self._parked_at.pop(task.id, None)
 
+    def to_back(self, task: Task):
+        """Re-queue a parked task at the BACK of the line — the regrant
+        path for a stream whose resources were reclaimed mid-wait (e.g. a
+        KV table spilled to the swap tier): it consumed its turn, so every
+        waiter currently in line now goes first.  Resets its parked-since
+        clock (the new wait starts now); a no-op for tasks not in line."""
+        if task.id not in self._q:
+            return
+        self._q.move_to_end(task.id)
+        self._parked_at[task.id] = self._clock()
+
     def parked_since(self, task: Task) -> Optional[float]:
         """Clock time at which ``task`` first joined the line (survives
         wake/re-park cycles), or None if it is not in the line."""

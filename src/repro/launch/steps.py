@@ -312,6 +312,31 @@ def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None):
     return serve_chunk_step
 
 
+def make_spill_gather(spec):
+    """(storage, blocks, state_slot) -> host leaf list.  The device->host
+    half of a swap-tier KV spill: DMAs exactly a stream's used pages (and
+    state slot) out of the block pool (``spec`` is the pool's
+    ``CacheViewSpec``)."""
+
+    def spill_gather(storage, blocks, state_slot=None):
+        return dec.extract_pool_entries(storage, spec, blocks,
+                                        state_slot=state_slot)
+
+    return spill_gather
+
+
+def make_spill_scatter(spec):
+    """(storage, blocks, host_leaves, state_slot) -> storage'.  The
+    host->device half of a swap-tier restore: writes spilled pages back
+    into a fresh reservation's physical blocks."""
+
+    def spill_scatter(storage, blocks, host_leaves, state_slot=None):
+        return dec.insert_pool_entries(storage, spec, blocks, host_leaves,
+                                       state_slot=state_slot)
+
+    return spill_scatter
+
+
 def make_generate(cfg: ModelConfig, steps: int, temperature: float = 0.0):
     """Greedy/temperature loop over serve_step (used by examples/serving)."""
     serve_step = make_serve_step(cfg)

@@ -242,6 +242,54 @@ def copy_pool_entries(pool, spec: CacheViewSpec, src_blocks, dst_blocks,
     return jax.tree.unflatten(spec.treedef, out)
 
 
+def extract_pool_entries(pool, spec: CacheViewSpec, blocks,
+                         state_slot: Optional[int] = None):
+    """Gather physical pages (and optionally a state slot) out of the pool
+    into HOST (numpy) arrays — the device->host half of a swap-tier spill.
+
+    Returns a flat leaf list in ``jax.tree`` order; entries are None where
+    a leaf contributes nothing (token leaves when ``blocks`` is empty,
+    state leaves when ``state_slot`` is None).  On a real fleet this is the
+    D2H DMA of exactly the stream's used pages; ``insert_pool_entries`` is
+    its inverse."""
+    import numpy as np
+    blk = jnp.asarray(list(blocks), jnp.int32)
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        if s.token_axis is not None:
+            out.append(np.asarray(jnp.take(leaf, blk, axis=ax))
+                       if blk.size else None)
+        else:
+            out.append(np.asarray(jnp.take(leaf, jnp.asarray([state_slot]),
+                                           axis=ax))
+                       if state_slot is not None else None)
+    return out
+
+
+def insert_pool_entries(pool, spec: CacheViewSpec, blocks, host_leaves,
+                        state_slot: Optional[int] = None):
+    """Scatter host arrays from ``extract_pool_entries`` back into the pool
+    at (freshly reserved) ``blocks`` / ``state_slot`` — the host->device
+    half of a swap-tier restore.  Page COUNT must match the extract; the
+    physical ids may differ (the restore's reservation is new)."""
+    blk = jnp.asarray(list(blocks), jnp.int32)
+    out = []
+    for leaf, host, s in zip(jax.tree.leaves(pool), host_leaves, spec.leaves):
+        ax = s.batch_axis
+        idx = (slice(None),) * ax
+        if s.token_axis is not None:
+            if blk.size and host is not None:
+                assert host.shape[ax] == blk.size, \
+                    f"spill holds {host.shape[ax]} pages, restoring {blk.size}"
+                leaf = leaf.at[idx + (blk,)].set(jnp.asarray(host))
+        elif state_slot is not None and host is not None:
+            leaf = leaf.at[idx + (jnp.asarray([state_slot]),)].set(
+                jnp.asarray(host))
+        out.append(leaf)
+    return jax.tree.unflatten(spec.treedef, out)
+
+
 def select_streams(spec: CacheViewSpec, mask, new_cache, old_cache):
     """Per-stream cache select: leaves of ``new_cache`` where ``mask`` (B,)
     is True, ``old_cache`` elsewhere — broadcast along each leaf's stream

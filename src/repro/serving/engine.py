@@ -40,10 +40,19 @@ ARCAS mapping (the paper's runtime, applied to inference):
     non-adaptive runs generate identical tokens;
   * incremental allocation can deadlock (every stream in a domain holding
     pages and needing one more); a ``round_hook`` on the scheduler watches
-    for allocation stalls and EVICTS the most-recently-parked stream —
-    its pages are freed to the longest-parked waiter and the evicted
-    request re-runs from scratch, which under greedy decoding regenerates
-    the identical tokens;
+    for allocation stalls and resolves them up a memory-pressure LADDER:
+    admission headroom (keep ``k`` blocks free past the first chunk) makes
+    deadlocks rarer, parking absorbs transient pressure, and when the
+    watchdog fires the victim's used pages are SPILLED to a host swap tier
+    (``evict_mode="swap"``, the default): its device pages go to the
+    longest-parked waiter, the table turns host-resident (migrating by
+    re-point, zero device copies), and on re-grant the stream restores its
+    pages and resumes mid-decode at its saved cursor — zero recomputed
+    tokens.  ``evict_mode="restart"`` keeps the PR-3 last resort (also the
+    swap mode's fallback when every parked stream is already spilled):
+    free the victim and re-run it from scratch, which under greedy
+    decoding regenerates the identical tokens at ``recompute_tokens``
+    cost;
   * an open-loop client coroutine (``open_loop_client``) shares the same
     TaskRuntime and submits requests over time from a seeded schedule, so
     steady-state adaptation and TTFT/TPOT tails are actually exercised.
@@ -131,6 +140,16 @@ class EngineConfig:
                                         # equivalence); default max_batch
     stall_evict_rounds: int = 6        # allocation-stall rounds before the
                                        # deadlock breaker evicts a stream
+    evict_mode: str = "swap"           # stall-watchdog policy: "swap" spills
+                                       # the victim's used pages to the host
+                                       # tier and resumes it mid-decode on
+                                       # re-grant (zero recompute); "restart"
+                                       # keeps the PR-3 recompute-from-
+                                       # scratch eviction
+    headroom: int = 0                  # lazy admission guard: grant only
+                                       # when the domain keeps this many
+                                       # free blocks AFTER the first chunk
+                                       # (k=0 = unguarded PR-3 behavior)
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -230,6 +249,8 @@ class ServeEngine:
         self.relayouts: List[Dict] = []
         self.pool: Optional[KVBlockPool] = None
         self._lazy = ecfg.paged and ecfg.lazy
+        if ecfg.evict_mode not in ("swap", "restart"):
+            raise ValueError(f"unknown evict_mode {ecfg.evict_mode!r}")
         self._parked: Dict[int, _Parked] = {}
         self._park_seq = itertools.count()
         self._progress_mark = -1.0
@@ -310,12 +331,17 @@ class ServeEngine:
     def _try_admit(self, total_tokens: int, first_tokens: Optional[int]
                    ) -> Tuple[Optional["_Group"], Optional[KVTable]]:
         """Sweep every group (least-pressured first) and every domain it
-        owns; one logical alloc failure only when the whole pool is dry."""
+        owns; one logical alloc failure only when the whole pool is dry.
+        Lazy admissions keep ``headroom`` blocks free in the granting
+        domain so growth of in-flight streams is less likely to close the
+        incremental-allocation deadlock."""
+        headroom = self.ecfg.headroom if self._lazy else 0
         for g in sorted(self.groups, key=lambda gr: (gr.kv_pressure(),
                                                      len(gr.queue), gr.gid)):
             for d in self._domain_order(g):
                 table = self.pool.reserve(d, total_tokens,
                                           first_tokens=first_tokens,
+                                          headroom=headroom,
                                           count_failure=False)
                 if table is not None:
                     return g, table
@@ -585,7 +611,12 @@ class ServeEngine:
         when it reaches the head of the line (same discipline as
         admission, so grants stay FIFO across admissions AND growers); on
         grant, hand the stream back to the owner group of its (possibly
-        migrated) domain."""
+        migrated) domain.
+
+        If the stall watchdog SPILLED the stream while it waited, the
+        retry becomes a restore: re-grant device pages (any domain —
+        host-resident tables re-point for free), scatter the host payload
+        back, and resume at the saved cursor — zero recomputed tokens."""
         req = rec.req
         while True:
             if rec.evicted:
@@ -593,10 +624,15 @@ class ServeEngine:
             if self.waiters.oldest() is not rec.cell["task"]:
                 yield BLOCK             # not our turn: the grant cascade
                 continue                # (or a free) will wake the head
-            g = self._owner_group(req.table.domain)
-            _, need = self._next_chunk_need(req, rec.pos)
-            if self._grow_stream(req, g, max(need, 0)):
-                break
+            if req.table.spill is not None:
+                g = self._restore_stream(rec)
+                if g is not None:
+                    break
+            else:
+                g = self._owner_group(req.table.domain)
+                _, need = self._next_chunk_need(req, rec.pos)
+                if self._grow_stream(req, g, max(need, 0)):
+                    break
             yield BLOCK                 # woken by KVBlockPool.free
         self.waiters.remove(rec.cell["task"])
         self.waiters.wake(1)            # maybe the next waiter fits too
@@ -604,6 +640,37 @@ class ServeEngine:
         req.group = g.gid
         g.resume.append(_InFlight(req, None, rec.pos, rec.token))
         return
+
+    def _restore_stream(self, rec: _Parked) -> Optional["_Group"]:
+        """Re-grant a SPILLED stream: find a domain with room for its host
+        pages PLUS the growth its next chunk needs (its own domain first —
+        re-pointing a host-resident table to any other is free), restore,
+        grow, and return the domain's owner group; None when no domain can
+        take it yet."""
+        req = rec.req
+        t = req.table
+        sp = t.spill
+        n, _ = self._next_chunk_need(req, rec.pos)
+        grow_by = max(0, self.pool.pages_needed(rec.pos + n) - sp.pages)
+        order = [t.domain] + [
+            d for g in sorted(self.groups,
+                              key=lambda gr: (gr.kv_pressure(), gr.gid))
+            for d in self._domain_order(g) if d != t.domain]
+        for d in order:
+            if self.pool.free_blocks(d) < sp.pages + grow_by:
+                continue
+            if self.pool.has_state and not self.pool.free_states(d):
+                continue
+            if not self.pool.migrate(t, d):     # spilled: free re-point
+                continue
+            if not self.pool.restore(t):
+                continue
+            if grow_by and not self.pool.grow(t, grow_by):
+                # defensive (free list was checked above): the stream
+                # re-parks as an ordinary parked-with-pages waiter
+                return None
+            return self._owner_group(t.domain)
+        return None
 
     # -- allocation-stall watchdog (the incremental-allocation deadlock) -----
     def _progress_signature(self) -> float:
@@ -629,14 +696,45 @@ class ServeEngine:
         self._stall_rounds += 1
         if self._stall_rounds >= self.ecfg.stall_evict_rounds \
                 and self._parked:
-            self._evict_youngest()
+            if self.ecfg.evict_mode == "swap" and self._spill_youngest():
+                pass
+            else:
+                self._evict_youngest()
             self._stall_rounds = 0
 
+    def _spill_youngest(self) -> bool:
+        """Swap-tier deadlock breaker: move the most-recently-parked
+        stream's used pages to the host spill store — its device pages go
+        to the LONGEST-parked waiter via the free callback, but nothing is
+        recomputed: the stream keeps its saved cursor and restores
+        mid-decode when it is re-granted pages.  The victim re-queues at
+        the BACK of the wait line (it had its turn), exactly where
+        restart-eviction would have sent its re-admission.  False when
+        every parked stream is already host-resident (nothing left to
+        spill — the caller falls back to restart eviction)."""
+        cands = [r for r in self._parked.values()
+                 if r.req.table is not None and r.req.table.spill is None
+                 and r.req.table.blocks]
+        if not cands:
+            return False
+        rec = max(cands, key=lambda r: r.seq)
+        task = rec.cell.get("task")
+        if task is not None:
+            # demote BEFORE spilling: the spill's free callback wakes the
+            # line head, which must be the next waiter — not the victim
+            self.waiters.to_back(task)
+        self.pool.spill(rec.req.table)  # frees pages -> wakes the line head
+        rec.seq = next(self._park_seq)  # its park is "fresh" again
+        return True
+
     def _evict_youngest(self):
-        """Deadlock breaker: free the most-recently-parked stream's pages
-        (granting them to the LONGEST-parked waiter via the free callback)
-        and restart it from scratch — greedy decoding regenerates the
-        identical tokens, so eviction is invisible in the output."""
+        """Restart-eviction deadlock breaker (``evict_mode="restart"``, and
+        the swap mode's last resort): free the most-recently-parked
+        stream's pages (granting them to the LONGEST-parked waiter via the
+        free callback) and restart it from scratch — greedy decoding
+        regenerates the identical tokens, so eviction is invisible in the
+        output, but every token processed so far is recomputed
+        (``recompute_tokens``)."""
         rec = max(self._parked.values(), key=lambda r: r.seq)
         rec.evicted = True
         self._parked.pop(rec.req.rid, None)
@@ -650,6 +748,7 @@ class ServeEngine:
         req.generated = []
         req.t_first = None
         self.counters.add("kv_evictions", 1)
+        self.counters.add("recompute_tokens", rec.pos)
         cell: Dict[str, Any] = {}
         cell["task"] = self.sched.spawn(
             self._admission_task(req, cell), name=f"readmit{req.rid}",
@@ -843,7 +942,8 @@ class ServeEngine:
         if self.pool is None:
             return None
         names = ("kv_alloc_failures", "kv_blocks_migrated", "kv_lazy_grows",
-                 "kv_mid_decode_parks", "prefill_chunks")
+                 "kv_mid_decode_parks", "prefill_chunks",
+                 "kv_spilled_pages", "kv_restores", "recompute_tokens")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -894,6 +994,8 @@ class ServeEngine:
         s["prefill_chunk_bytes"] = prefill_chunk_bytes(
             self.cfg, self._chunk, self.ecfg.max_len)
         s["evictions"] = self.counters.totals.get("kv_evictions", 0.0)
+        s["recompute_tokens"] = self.counters.totals.get(
+            "recompute_tokens", 0.0)
         s["blocks_per_relayout"] = [r.get("blocks_migrated", 0.0)
                                     for r in self.relayouts]
         return s

@@ -18,7 +18,13 @@ slot in a monolithic per-replica cache array:
   * a relayout re-points block *tables* at the new owner replica of their
     domain; only streams rebalanced onto a replica that does not own their
     domain copy their **used** pages (``migrate``) — never whole cache
-    slices.
+    slices;
+  * under memory pressure a parked stream's used pages can be SPILLED to a
+    host-side swap tier (``spill``/``restore``): its device pages are freed
+    to the wait-line head and the table turns host-resident — migrating for
+    free (pure domain re-point) — until it is re-granted pages and the
+    stream resumes mid-decode, instead of the restart-from-scratch eviction
+    that recomputes every token.
 
 Block id 0 and state slot 0 are reserved null entries: empty decode slots
 and the unreserved tail of short tables point at them, so gather/scatter
@@ -34,11 +40,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.costmodel import kv_cache_bytes
+from repro.core.costmodel import kv_cache_bytes, kv_spill_bytes
 from repro.core.counters import PerfCounters
+from repro.launch.steps import make_spill_gather, make_spill_scatter
 from repro.models import decode as dec
 
 
@@ -51,6 +58,16 @@ def kv_bytes_exact(cfg: ModelConfig, n_tokens: int, max_len: int) -> float:
 
 
 @dataclasses.dataclass
+class SpillEntry:
+    """Host-side payload of a spilled table: its used pages (+ state) as
+    numpy leaves in ``jax.tree`` order, waiting in the swap tier until the
+    stream is re-granted device pages."""
+    pages: int                      # used pages held host-side
+    data: List[Any]                 # host leaves from extract_pool_entries
+    had_state: bool = False         # a state slot rides in ``data``
+
+
+@dataclasses.dataclass
 class KVTable:
     """One stream's view into the pool: ring pages + state slot, resident
     in a single chiplet-group domain.
@@ -59,16 +76,27 @@ class KVTable:
     of its first prefill chunk and :meth:`KVBlockPool.grow` appends pages
     in ring order as the stream's ``pos`` crosses page boundaries, up to
     ``cap_pages`` (the eager reservation the PR-2 allocator made up
-    front).  ``cap_pages == 0`` means fully reserved at admission."""
+    front).  ``cap_pages == 0`` means fully reserved at admission.
+
+    A table can be SPILLED to the host swap tier under memory pressure
+    (:meth:`KVBlockPool.spill`): its used pages live in ``spill`` and it
+    holds no device resources until :meth:`KVBlockPool.restore` — while
+    host-resident it migrates between domains by re-pointing ``domain``
+    alone (zero device copies)."""
     domain: int
     blocks: List[int]               # reserved physical pages, ring order
     state_slot: int                 # 0 = none (model has no state leaves)
     used_pages: int = 0             # pages actually written (prefill/decode)
     cap_pages: int = 0              # lazy mode: max pages this stream needs
+    spill: Optional[SpillEntry] = None   # host payload while spilled
 
     @property
     def n_blocks(self) -> int:
         return len(self.blocks)
+
+    @property
+    def spilled(self) -> bool:
+        return self.spill is not None
 
 
 class KVBlockPool:
@@ -115,6 +143,12 @@ class KVBlockPool:
             n_states=1 + n_domains * self.states_per_domain,
             block_tokens=self.block_tokens, max_len=max_len)
         self._on_free: List[Callable[[], None]] = []
+        # swap tier: D2H/H2D copies of a table's used pages + state slot
+        self._spill_gather = make_spill_gather(self.spec)
+        self._spill_scatter = make_spill_scatter(self.spec)
+        self.spilled_tables = 0         # tables currently host-resident
+        self.spilled_bytes = 0.0        # swap-tier footprint right now
+        self.peak_spilled_bytes = 0.0
         self.peak_used_blocks = 0
         # per-domain high-water marks (blocks in use), so chunked prefill /
         # lazy growth can report byte-accurate per-domain footprints
@@ -202,6 +236,7 @@ class KVBlockPool:
     # -- alloc / free ------------------------------------------------------
     def reserve(self, domain: int, total_tokens: int, *,
                 first_tokens: Optional[int] = None,
+                headroom: int = 0,
                 count_failure: bool = True) -> Optional[KVTable]:
         """Reserve a table for a stream of ``total_tokens`` context in
         ``domain``; None when the domain cannot serve it right now.
@@ -212,6 +247,14 @@ class KVBlockPool:
         footprint — as its growth bound for :meth:`grow`.  The budget check
         still uses the CAP: a stream whose full ring cannot fit a domain
         can never complete, lazily or not.
+
+        ``headroom`` is the admission-control knob for elastic mode: grant
+        only when the domain would keep ``headroom`` free blocks AFTER the
+        reservation, so lazy growth of already-admitted streams is less
+        likely to close the incremental-allocation deadlock in the first
+        place.  ``headroom=0`` is exactly the unguarded grant; the knob is
+        clamped so an EMPTY domain can always admit (a too-large k must
+        throttle, never livelock).
 
         ``count_failure=False`` lets a caller probing several domains count
         one logical failure instead of one per domain."""
@@ -224,7 +267,9 @@ class KVBlockPool:
             raise ValueError("pool has no state slots but model needs them")
         pages = cap if first_tokens is None else \
             min(cap, self.pages_needed(first_tokens))
-        if not self.can_reserve(domain, pages):
+        headroom = min(headroom if pages else 0,
+                       max(0, self.blocks_per_domain - pages))
+        if not self.can_reserve(domain, pages + headroom):
             if count_failure:
                 self.counters.add("kv_alloc_failures", 1)
             return None
@@ -264,12 +309,17 @@ class KVBlockPool:
 
     def free(self, table: KVTable):
         """Return a table's pages + state slot and fire the free callbacks
-        (which unblock BLOCK-parked admission coroutines)."""
+        (which unblock BLOCK-parked admission coroutines).  Freeing a
+        SPILLED table drops its host payload too (the restart-eviction
+        fallback path)."""
         self._free_blocks[table.domain].extend(sorted(table.blocks))
         if self.has_state and table.state_slot:
             self._free_states[table.domain].append(table.state_slot)
         self.counters.add("kv_blocks_freed", len(table.blocks))
+        if table.spill is not None:
+            self._drop_spill(table)
         table.blocks = []
+        table.state_slot = 0
         table.used_pages = 0
         self.active_tables -= 1
         self._gauges()
@@ -279,6 +329,77 @@ class KVBlockPool:
     def on_free(self, cb: Callable[[], None]):
         self._on_free.append(cb)
 
+    # -- swap tier: spill parked pages to host instead of discarding them --
+    def spill(self, table: KVTable) -> int:
+        """Move a table's USED pages (+ state slot) into the host swap
+        tier and free its device resources to the wait-line head.
+
+        The table stays live (``active_tables`` unchanged — the stream is
+        still admitted, just host-resident) but holds zero device blocks
+        until :meth:`restore`; its saved decode cursor makes the
+        spill/restore cycle invisible in the token output.  Returns the
+        number of pages spilled (0 = already spilled, nothing to do)."""
+        if table.spill is not None:
+            return 0
+        used = min(table.used_pages, len(table.blocks))
+        had_state = bool(self.has_state and table.state_slot)
+        data = self._spill_gather(
+            self.storage, table.blocks[:used],
+            state_slot=table.state_slot if had_state else None)
+        table.spill = SpillEntry(pages=used, data=data, had_state=had_state)
+        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        if had_state:
+            self._free_states[table.domain].append(table.state_slot)
+        self.counters.add("kv_blocks_freed", len(table.blocks))
+        self.counters.add("kv_spills", 1)
+        self.counters.add("kv_spilled_pages", used)
+        table.blocks = []
+        table.state_slot = 0
+        self.spilled_tables += 1
+        self.spilled_bytes += kv_spill_bytes(self.cfg, used,
+                                             self.block_tokens, had_state)
+        self.peak_spilled_bytes = max(self.peak_spilled_bytes,
+                                      self.spilled_bytes)
+        self._gauges()
+        for cb in self._on_free:
+            cb()
+        return used
+
+    def restore(self, table: KVTable) -> bool:
+        """Re-grant device pages to a spilled table in its CURRENT domain
+        (re-point ``migrate`` first to restore somewhere else) and scatter
+        the host payload back; False (no side effects) when the domain
+        lacks pages or a state slot.  The stream resumes mid-decode at its
+        saved cursor — zero recomputed tokens."""
+        sp = table.spill
+        if sp is None:
+            return True
+        d = table.domain
+        if (len(self._free_blocks[d]) < sp.pages
+                or (self.has_state and not self._free_states[d])):
+            self.counters.add("kv_restore_failures", 1)
+            return False
+        blocks = [self._free_blocks[d].pop() for _ in range(sp.pages)]
+        slot = self._free_states[d].pop() if self.has_state else 0
+        self.storage = self._spill_scatter(
+            self.storage, blocks, sp.data,
+            state_slot=slot if sp.had_state else None)
+        table.blocks = blocks
+        table.state_slot = slot
+        table.used_pages = sp.pages
+        self._drop_spill(table)
+        self.counters.add("kv_blocks_allocated", sp.pages)
+        self.counters.add("kv_restores", 1)
+        self._note_usage(d)
+        return True
+
+    def _drop_spill(self, table: KVTable):
+        sp = table.spill
+        self.spilled_tables -= 1
+        self.spilled_bytes -= kv_spill_bytes(self.cfg, sp.pages,
+                                             self.block_tokens, sp.had_state)
+        table.spill = None
+
     # -- migration ---------------------------------------------------------
     def migrate(self, table: KVTable, new_domain: int) -> bool:
         """Move a table into ``new_domain``: re-reserve there, copy only the
@@ -286,6 +407,13 @@ class KVBlockPool:
         Returns False (no side effects) when the target domain lacks space.
         """
         if table.domain == new_domain:
+            return True
+        if table.spill is not None:
+            # host-resident: the table holds no device resources, so a
+            # migration (relayout rebalance, steal into the thief's domain)
+            # is a pure re-point — zero device copies, can never fail
+            table.domain = new_domain
+            self.counters.add("kv_spill_repoints", 1)
             return True
         pages = len(table.blocks)
         if (len(self._free_blocks[new_domain]) < pages
@@ -326,6 +454,53 @@ class KVBlockPool:
         self.counters.set("kv_pool_total_blocks", float(self.total_blocks()))
         self.counters.set("kv_pool_occupancy", self.occupancy())
         self.counters.set("kv_active_tables", float(self.active_tables))
+        self.counters.set("kv_spilled_tables", float(self.spilled_tables))
+        self.counters.set("kv_spilled_bytes", self.spilled_bytes)
+
+    # -- consistency -------------------------------------------------------
+    def audit(self, tables: Iterable[KVTable] = ()):
+        """Assert exact free-list accounting: free lists hold unique ids
+        inside their domain's range, every live table's blocks are disjoint
+        from the free lists and from each other, and held + free covers the
+        pool EXACTLY — ``tables`` must therefore be every live table (a
+        block in neither a table nor a free list is a leak).  The
+        oversubscription stress suite calls this after every
+        spill/restore/free cycle; raises AssertionError on any leak."""
+        held_blocks: List[int] = []
+        held_states: List[int] = []
+        for t in tables:
+            if t.spill is not None:
+                assert not t.blocks and not t.state_slot, \
+                    f"spilled table holds device resources: {t}"
+            held_blocks.extend(t.blocks)
+            if self.has_state and t.state_slot:
+                held_states.append(t.state_slot)
+        assert len(held_blocks) == len(set(held_blocks)), \
+            "live tables share physical blocks"
+        for d in range(self.n_domains):
+            lo = 1 + d * self.blocks_per_domain
+            free = self._free_blocks[d]
+            assert len(free) == len(set(free)), f"domain {d}: dup free ids"
+            assert all(lo <= b < lo + self.blocks_per_domain for b in free), \
+                f"domain {d}: free id outside range"
+            slo = 1 + d * self.states_per_domain
+            sfree = self._free_states[d]
+            assert len(sfree) == len(set(sfree)), f"domain {d}: dup states"
+            assert all(slo <= s < slo + self.states_per_domain
+                       for s in sfree), f"domain {d}: state outside range"
+        all_free = [b for f in self._free_blocks for b in f]
+        assert not set(held_blocks) & set(all_free), \
+            "block is both free and held"
+        all_sfree = [s for f in self._free_states for s in f]
+        assert not set(held_states) & set(all_sfree), \
+            "state slot is both free and held"
+        assert len(held_blocks) + len(all_free) == self.total_blocks(), \
+            f"block leak: {len(held_blocks)} held + {len(all_free)} free " \
+            f"!= {self.total_blocks()} total"
+        total_states = self.n_domains * self.states_per_domain
+        assert len(held_states) + len(all_sfree) == total_states, \
+            f"state-slot leak: {len(held_states)} held + " \
+            f"{len(all_sfree)} free != {total_states} total"
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -348,6 +523,13 @@ class KVBlockPool:
             "grow_failures": snap.get("kv_grow_failures", 0.0),
             "mid_decode_parks": snap.get("kv_mid_decode_parks", 0.0),
             "prefill_chunks": snap.get("prefill_chunks", 0.0),
+            "spills": snap.get("kv_spills", 0.0),
+            "spilled_pages": snap.get("kv_spilled_pages", 0.0),
+            "restores": snap.get("kv_restores", 0.0),
+            "restore_failures": snap.get("kv_restore_failures", 0.0),
+            "spill_repoints": snap.get("kv_spill_repoints", 0.0),
+            "spilled_tables": float(self.spilled_tables),
+            "peak_spilled_bytes": self.peak_spilled_bytes,
             "bytes_per_domain": self.domain_bytes(),
             "prefill_chunk_bytes": prefill_chunk_bytes(
                 self.cfg, self.block_tokens, self.max_len),

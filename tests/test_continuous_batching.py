@@ -130,17 +130,22 @@ def test_mid_decode_park_fairness_over_new_admissions():
 
 def test_eviction_breaks_incremental_allocation_deadlock():
     """Two streams each holding one page and each needing one more is the
-    classic incremental-allocation deadlock: the stall watchdog evicts the
+    classic incremental-allocation deadlock: in ``evict_mode="restart"``
+    (the PR-3 policy, now behind a flag) the stall watchdog evicts the
     most-recently-parked stream, its pages unblock the other, and the
     evicted request restarts — with greedy decoding the final tokens are
-    identical to the eager (serialized) run."""
+    identical to the eager (serialized) run.  The swap-tier default is
+    exercised by tests/test_memory_pressure.py."""
     rng = np.random.default_rng(2)
     prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(2)]
     max_new = [26, 26]
-    eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1)
+    eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1,
+                          evict_mode="restart")
     c = res["counters"]
     assert c.get("kv_mid_decode_parks", 0) >= 2      # both parked
     assert c.get("kv_evictions", 0) >= 1             # watchdog fired
+    assert c.get("kv_spills", 0) == 0                # swap tier never used
+    assert c.get("recompute_tokens", 0) > 0          # the wasted work
     assert eng.pool.occupancy() == 0.0
     _, reqs_e, _ = _run(prompts, max_new, lazy=False, groups=1)
     assert [r.generated for r in reqs] == [r.generated for r in reqs_e]

@@ -1,0 +1,506 @@
+"""Oversubscription stress suite (ISSUE 4): swap-tier KV eviction.
+
+Under deep oversubscription the PR-3 stall watchdog broke incremental-
+allocation deadlocks by restart-from-scratch eviction — every evicted
+stream recomputed all of its tokens.  The swap tier spills the victim's
+used pages to a host-side store instead and resumes the stream mid-decode
+at its saved cursor when pages are re-granted.  Everything here hammers
+the memory-pressure ladder (headroom -> park -> spill -> restart
+fallback) and asserts the invariants that make it safe:
+
+  * token identity across ``evict_mode`` in {"swap", "restart"} AND an
+    uncontended baseline — spills, restores and evictions must all be
+    invisible in the output;
+  * no allocation deadlock (every randomized schedule drains);
+  * FIFO grant order preserved (admissions are granted in submit order);
+  * pool free-block accounting exact after EVERY spill/restore/free cycle
+    (``KVBlockPool.audit``);
+  * swap mode never recomputes (``recompute_tokens == 0``).
+"""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import REGISTRY, reduced_config
+from repro.core.topology import ChipletTopology
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.kvpool import KVBlockPool
+
+given, settings, st = hypothesis_tools()
+
+CFG = reduced_config(REGISTRY["llama3-8b"])
+
+
+def _engine(*, groups=1, max_batch=2, max_len=32, pool_streams=1,
+            evict_mode="swap", headroom=0, adaptive=False, **ecfg_kw):
+    topo = ChipletTopology(n_pods=1, groups_per_pod=groups,
+                           chips_per_group=1)
+    ecfg = EngineConfig(max_batch=max_batch, max_len=max_len, paged=True,
+                        lazy=True, pool_streams=pool_streams,
+                        adaptive=adaptive, evict_mode=evict_mode,
+                        headroom=headroom, **ecfg_kw)
+    return ServeEngine(CFG, topo, ecfg, spread_rate=1, seed=0)
+
+
+def _instrument(eng):
+    """Wire up the suite's two live invariants: pool accounting audited
+    after every spill/restore/free, and the grant log (WaitQueue.remove is
+    called exactly at resource grant)."""
+    grants = []
+    orig_remove = eng.waiters.remove
+
+    def remove(task):
+        grants.append(task.name)
+        orig_remove(task)
+
+    eng.waiters.remove = remove
+    pool = eng.pool
+
+    def live_tables():
+        return [r.table for r in eng.submitted if r.table is not None]
+
+    for name in ("spill", "restore", "free"):
+        orig = getattr(pool, name)
+
+        def wrapped(table, _orig=orig):
+            out = _orig(table)
+            pool.audit(live_tables())
+            return out
+
+        setattr(pool, name, wrapped)
+    return grants
+
+
+def _drain(eng):
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "allocation deadlock"
+    return res
+
+
+def _longtail(rng, n, max_len):
+    """Randomized (gap, prompt, max_new): bursty arrivals, mixed prompt
+    lengths, long-tail max_new (the mix that thrashed PR-3)."""
+    out = []
+    for _ in range(n):
+        gap = int(rng.integers(0, 4))
+        plen = int(rng.integers(3, max_len // 2))
+        if rng.random() < 0.5:
+            max_new = int(rng.integers(max_len // 2, max_len - plen))
+        else:
+            max_new = int(rng.integers(1, max(2, max_len // 8)))
+        out.append((gap, rng.integers(2, CFG.vocab, size=plen), max_new))
+    return out
+
+
+def _fifo_admit_order(grants):
+    admits = [int(n[len("admit"):]) for n in grants
+              if n.startswith("admit")]
+    assert admits == sorted(admits), \
+        f"admission grants out of submit order: {admits}"
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property (randomized oversubscription schedules)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_token_identity_swap_restart_baseline(seed):
+    """For every randomized arrival/prompt/max_new schedule: swap mode,
+    restart mode and an uncontended baseline generate IDENTICAL tokens;
+    swap never recomputes; grants stay FIFO; accounting stays exact."""
+    rng = np.random.default_rng(seed)
+    sched = _longtail(rng, int(rng.integers(3, 7)), 32)
+    groups = int(rng.integers(1, 3))
+    outs, counters = {}, {}
+    for mode, (evict, streams) in {"swap": ("swap", 1),
+                                   "restart": ("restart", 1),
+                                   "baseline": ("swap", 8)}.items():
+        eng = _engine(groups=groups, max_batch=4, pool_streams=streams,
+                      evict_mode=evict)
+        grants = _instrument(eng)
+        eng.open_loop_client(list(sched))
+        res = _drain(eng)
+        outs[mode] = [r.generated for r in
+                      sorted(eng.submitted, key=lambda r: r.rid)]
+        counters[mode] = res["counters"]
+        _fifo_admit_order(grants)
+        assert eng.pool.occupancy() == 0.0
+        assert eng.pool.spilled_tables == 0 and eng.pool.spilled_bytes == 0
+        eng.pool.audit([])
+    assert outs["swap"] == outs["restart"] == outs["baseline"]
+    assert counters["swap"].get("recompute_tokens", 0) == 0
+    assert counters["swap"].get("kv_evictions", 0) == 0
+    assert counters["baseline"].get("kv_spills", 0) == 0
+    # every restart eviction was wasted recompute the swap tier avoids
+    if counters["restart"].get("kv_evictions", 0):
+        assert counters["restart"]["recompute_tokens"] > 0
+
+
+def test_deep_oversubscription_evictions_become_spills():
+    """The acceptance scenario at test scale: a dense schedule at 1
+    stream/domain that forces restart mode to evict repeatedly.  Swap mode
+    must generate the identical tokens with ZERO recomputed tokens — every
+    eviction becomes a spill/restore cycle."""
+    rng = np.random.default_rng(0)
+    sched = [(int(rng.integers(0, 2)),
+              rng.integers(2, CFG.vocab, size=4), 26) for _ in range(6)]
+    runs = {}
+    for mode in ("swap", "restart"):
+        eng = _engine(groups=1, max_batch=4, pool_streams=1,
+                      evict_mode=mode)
+        _instrument(eng)
+        eng.open_loop_client(list(sched))
+        res = _drain(eng)
+        runs[mode] = (eng, res["counters"])
+    cs, cr = runs["swap"][1], runs["restart"][1]
+    assert cr.get("kv_evictions", 0) >= 2, "scenario must thrash restart"
+    assert cr.get("recompute_tokens", 0) > 0
+    assert cs.get("kv_spills", 0) >= 2
+    assert cs.get("kv_restores", 0) == cs.get("kv_spills", 0)
+    assert cs.get("kv_evictions", 0) == 0
+    assert cs.get("recompute_tokens", 0) == 0
+    toks = {m: [r.generated for r in
+                sorted(runs[m][0].submitted, key=lambda r: r.rid)]
+            for m in runs}
+    assert toks["swap"] == toks["restart"]
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+def test_spill_mid_prefill_resumes_at_partial_chunk_cursor():
+    """A stream spilled while still MID-PREFILL (its park cursor sits at a
+    chunk boundary inside the prompt) restores and finishes the prompt
+    from that cursor — never re-chunking from position 0."""
+    r = np.random.default_rng(0)
+    sched = []
+    for _ in range(4):        # bursty arrivals, prompts spanning 2-3 pages
+        gap = int(r.integers(0, 6))
+        plen = int(r.integers(3, 31))
+        mx = int(r.integers(2, 28))
+        sched.append((gap, r.integers(2, CFG.vocab, size=plen), mx))
+    spilled_at = []
+
+    def run(streams):
+        eng = _engine(groups=1, max_batch=2, pool_streams=streams,
+                      block_tokens=8)
+        orig_spill = eng.pool.spill
+
+        def spy(table):
+            for rec in eng._parked.values():
+                if rec.req.table is table:
+                    spilled_at.append((rec.pos, len(rec.req.prompt)))
+            return orig_spill(table)
+
+        eng.pool.spill = spy
+        eng.open_loop_client(list(sched))
+        _drain(eng)
+        return [req.generated for req in
+                sorted(eng.submitted, key=lambda q: q.rid)]
+
+    toks = run(1)
+    assert any(pos < plen for pos, plen in spilled_at), \
+        f"no mid-prefill spill happened: {spilled_at}"
+    assert toks == run(8)                      # uncontended baseline
+
+
+def test_spill_victim_relayouted_before_restore():
+    """A relayout (replica groups merge/split) fired while a stream sits
+    SPILLED must not strand it: the host-resident table re-points /
+    restores into whatever domain has room under the new owners, and the
+    run stays token-identical to the undisturbed one."""
+    from repro.core.controller import Decision
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, CFG.vocab, size=int(rng.integers(3, 10)))
+               for _ in range(12)]
+    max_new = [26 if i % 2 == 0 else 3 for i in range(12)]
+
+    def run(relayout_on_spill):
+        eng = _engine(groups=4, max_batch=1, pool_streams=1)
+        _instrument(eng)
+        if relayout_on_spill:
+            orig_spill = eng.pool.spill
+            fired = []
+
+            def spill_then_relayout(table):
+                out = orig_spill(table)
+                if not fired:           # first spill: merge 4 groups -> 2
+                    fired.append(True)  # (the controller's spread move,
+                    ctl = eng.sched.controller          # forced mid-spill)
+                    ctl.spread_rate = 2
+                    eng._relayout(eng.sched.layout(),
+                                  Decision(step=0, old_spread=1,
+                                           new_spread=2, rate=0.0,
+                                           reason="forced: spill in flight"))
+                return out
+
+            eng.pool.spill = spill_then_relayout
+        reqs = [eng.submit(p, max_new=m)
+                for p, m in zip(prompts, max_new)]
+        res = _drain(eng)
+        return eng, [r.generated for r in reqs], res
+
+    eng_a, toks_a, res_a = run(True)
+    c = res_a["counters"]
+    assert c.get("kv_spills", 0) >= 1
+    assert c.get("kv_restores", 0) == c.get("kv_spills", 0)
+    assert c.get("recompute_tokens", 0) == 0
+    assert len(eng_a.groups) == 2          # the relayout really happened
+    assert eng_a.pool.occupancy() == 0.0 and eng_a.pool.spilled_tables == 0
+    eng_b, toks_b, res_b = run(False)
+    assert toks_a == toks_b
+
+
+def test_spilled_table_steal_migration_is_zero_copy():
+    """Migrating a host-resident table (a steal pulling a spilled stream
+    into the thief's domain, or a relayout rebalance) re-points ``domain``
+    without touching device pages: ``kv_blocks_migrated`` unchanged,
+    ``kv_spill_repoints`` counted, restore lands in the new domain."""
+    pool = KVBlockPool(CFG, n_domains=2, max_len=32, blocks_per_domain=2,
+                       states_per_domain=2)
+    t = pool.reserve(0, 40, first_tokens=8)
+    pool.grow(t, 1)
+    t.used_pages = 2
+    pool.spill(t)
+    mig0 = pool.counters.totals.get("kv_blocks_migrated", 0.0)
+    assert pool.migrate(t, 1)
+    assert t.domain == 1 and t.blocks == []
+    assert pool.counters.totals.get("kv_blocks_migrated", 0.0) == mig0
+    assert pool.counters.totals.get("kv_spill_repoints", 0.0) == 1
+    assert pool.restore(t)
+    assert t.domain == 1 and len(t.blocks) == 2 and t.used_pages == 2
+    lo = 1 + 1 * pool.blocks_per_domain
+    assert all(lo <= b < lo + pool.blocks_per_domain for b in t.blocks)
+    pool.audit([t])
+    pool.free(t)
+    pool.audit([])
+
+
+def test_headroom_zero_reduces_to_pr3_and_k_prevents_deadlock():
+    """``headroom=0`` + ``evict_mode="restart"`` IS PR-3: the classic
+    two-stream deadlock produces the same eviction the PR-3 watchdog did.
+    ``headroom=1`` holds back the second admission so the deadlock never
+    forms — no parks, no spills, no evictions — at identical tokens."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(2)]
+    outs = {}
+    stats = {}
+    for name, (evict, k) in {"pr3": ("restart", 0), "swap0": ("swap", 0),
+                             "k1": ("swap", 1)}.items():
+        eng = _engine(groups=1, max_batch=2, pool_streams=1,
+                      evict_mode=evict, headroom=k)
+        reqs = [eng.submit(p, max_new=26) for p in prompts]
+        res = _drain(eng)
+        outs[name] = [r.generated for r in reqs]
+        stats[name] = res["counters"]
+    assert outs["pr3"] == outs["swap0"] == outs["k1"]
+    assert stats["pr3"].get("kv_evictions", 0) >= 1        # PR-3 behavior
+    assert stats["pr3"].get("kv_spills", 0) == 0
+    # same pressure, resolved by the swap tier instead
+    assert stats["swap0"].get("kv_spills", 0) == \
+        stats["pr3"].get("kv_evictions", 0)
+    assert stats["swap0"].get("recompute_tokens", 0) == 0
+    # headroom prevents the deadlock from ever forming
+    assert stats["k1"].get("kv_spills", 0) == 0
+    assert stats["k1"].get("kv_evictions", 0) == 0
+    assert stats["k1"].get("kv_mid_decode_parks", 0) == 0
+    # an absurd k throttles (serializes admissions) but can never
+    # livelock: reserve() clamps so an empty domain always admits
+    eng = _engine(groups=1, max_batch=2, pool_streams=1, headroom=99)
+    reqs = [eng.submit(p, max_new=26) for p in prompts]
+    _drain(eng)
+    assert [r.generated for r in reqs] == outs["pr3"]
+
+
+def test_watchdog_double_fire_while_spill_outstanding():
+    """A second watchdog fire while an earlier victim is still
+    host-resident must pick a DIFFERENT victim; once every parked stream
+    is spilled the ladder falls back to restart eviction — and the run
+    still drains token-identically."""
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(2)]
+    eng = _engine(groups=1, max_batch=2, pool_streams=1)
+    reqs = [eng.submit(p, max_new=26) for p in prompts]
+    eng._running = True
+    for g in eng.groups:
+        eng._spawn_group(g)
+    rounds = 0
+    while len(eng._parked) < 2 and rounds < 500:
+        eng.sched.tick()
+        rounds += 1
+    assert len(eng._parked) == 2, "deadlock scenario failed to form"
+    # fire 1: youngest parked stream spills
+    assert eng._spill_youngest()
+    spilled = {rid for rid, r in eng._parked.items()
+               if r.req.table.spill is not None}
+    assert len(spilled) == 1
+    # fire 2 (spill still outstanding): must pick the OTHER stream
+    assert eng._spill_youngest()
+    assert all(r.req.table.spill is not None
+               for r in eng._parked.values())
+    # fire 3: nothing left to spill -> the hook's restart fallback
+    assert not eng._spill_youngest()
+    ev0 = eng.counters.totals.get("kv_evictions", 0)
+    eng._stall_rounds = eng.ecfg.stall_evict_rounds
+    eng._progress_mark = eng._progress_signature()
+    eng._stall_hook()
+    assert eng.counters.totals.get("kv_evictions", 0) == ev0 + 1
+    eng.sched.run_until_done(max_rounds=100000,
+                             round_hook=eng._stall_hook)
+    assert all(r.done for r in eng.submitted)
+    assert eng.pool.occupancy() == 0.0 and eng.pool.spilled_tables == 0
+    # identical to the uncontended baseline
+    base = _engine(groups=1, max_batch=2, pool_streams=8)
+    base_reqs = [base.submit(p, max_new=26) for p in prompts]
+    _drain(base)
+    assert [r.generated for r in reqs] == \
+        [r.generated for r in base_reqs]
+
+
+def test_spill_carries_state_leaves_hybrid_model():
+    """A hybrid (recurrent + attention) model's per-stream STATE slot must
+    ride the spill with its ring pages: spill, cross-domain re-point,
+    restore — bit-identical page and state contents, exact accounting."""
+    import jax
+    import jax.numpy as jnp
+    cfg = reduced_config(REGISTRY["recurrentgemma-9b"])
+    pool = KVBlockPool(cfg, n_domains=2, max_len=32, blocks_per_domain=4,
+                       states_per_domain=2)
+    assert pool.has_state
+    t = pool.reserve(0, 40, first_tokens=8)
+    if pool.pages_per_stream:
+        pool.grow(t, 1)
+        t.used_pages = len(t.blocks)
+    new = []
+    for leaf, s in zip(jax.tree.leaves(pool.storage), pool.spec.leaves):
+        ax = s.batch_axis
+        idx = (slice(None),) * ax
+        if s.token_axis is not None and t.blocks:
+            leaf = leaf.at[idx + (jnp.asarray(t.blocks),)].set(3.25)
+        elif s.token_axis is None and t.state_slot:
+            leaf = leaf.at[idx + (t.state_slot,)].set(7.5)
+        new.append(leaf)
+    pool.storage = jax.tree.unflatten(pool.spec.treedef, new)
+    assert pool.spill(t) == t.used_pages
+    assert t.state_slot == 0 and pool.free_states(0) == 2
+    assert pool.migrate(t, 1)
+    assert pool.restore(t)
+    assert t.state_slot and t.domain == 1
+    for leaf, s in zip(jax.tree.leaves(pool.storage), pool.spec.leaves):
+        ax = s.batch_axis
+        if s.token_axis is not None and t.blocks:
+            vals = jnp.take(leaf, jnp.asarray(t.blocks), axis=ax)
+            assert jnp.all(vals == 3.25), "ring page data lost in spill"
+        elif s.token_axis is None and t.state_slot:
+            vals = jnp.take(leaf, jnp.asarray([t.state_slot]), axis=ax)
+            assert jnp.all(vals == 7.5), "state slot lost in spill"
+    pool.audit([t])
+    pool.free(t)
+    pool.audit([])
+    assert pool.spilled_tables == 0 and pool.spilled_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pool-level mechanics
+# ---------------------------------------------------------------------------
+
+def test_pool_spill_restore_accounting_and_failure_paths():
+    """Spill is idempotent, restore fails cleanly when the domain is full,
+    byte gauges track the swap tier exactly, and ``audit`` actually
+    catches a leak."""
+    from repro.core.costmodel import kv_spill_bytes
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=2,
+                       states_per_domain=2)
+    t = pool.reserve(0, 64, first_tokens=8)
+    pool.grow(t, 1)
+    t.used_pages = 2
+    assert pool.spill(t) == 2
+    assert pool.spill(t) == 0                       # idempotent
+    assert pool.spilled_bytes == pytest.approx(
+        kv_spill_bytes(CFG, 2, pool.block_tokens, False))
+    assert pool.peak_spilled_bytes == pool.spilled_bytes
+    # another stream takes the whole domain: restore must fail, no effects
+    other = pool.reserve(0, 64)
+    assert other is not None and len(other.blocks) == 2
+    free0 = pool.free_blocks(0)
+    assert not pool.restore(t)
+    assert pool.free_blocks(0) == free0 and t.spill is not None
+    assert pool.counters.totals.get("kv_restore_failures", 0) == 1
+    pool.free(other)
+    assert pool.restore(t)
+    assert pool.spilled_bytes == 0.0
+    pool.audit([t, other])
+    # audit catches a double-free (a block both held and on the free list)
+    pool._free_blocks[0].append(t.blocks[0])
+    with pytest.raises(AssertionError):
+        pool.audit([t])
+    pool._free_blocks[0].pop()
+    pool.audit([t])
+    # freeing a spilled table drops its host payload (restart fallback)
+    pool.free(t)
+    t2 = pool.reserve(0, 32, first_tokens=8)
+    t2.used_pages = 1
+    pool.spill(t2)
+    pool.free(t2)
+    assert pool.spilled_tables == 0 and pool.spilled_bytes == 0.0
+    pool.audit([])
+
+
+def test_spill_counters_surface_in_kv_stats_and_samples():
+    """kv_spilled_pages / kv_restores / recompute_tokens reach kv_stats
+    AND the profiler's StepSample stream (the wasted-recompute metric is a
+    first-class serving signal now)."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(2)]
+    eng = _engine(groups=1, max_batch=2, pool_streams=1)
+    [eng.submit(p, max_new=26) for p in prompts]
+    _drain(eng)
+    kv = eng.kv_stats()
+    for key in ("spills", "spilled_pages", "restores", "restore_failures",
+                "spill_repoints", "spilled_tables", "peak_spilled_bytes",
+                "recompute_tokens", "evictions"):
+        assert key in kv, key
+    assert kv["spills"] >= 1 and kv["restores"] >= 1
+    assert kv["spilled_pages"] >= 1
+    assert kv["peak_spilled_bytes"] > 0
+    assert kv["recompute_tokens"] == 0 and kv["evictions"] == 0
+    samples = eng.counters.samples
+    assert sum(s.kv_spilled_pages for s in samples) >= 1
+    assert sum(s.kv_restores for s in samples) >= 1
+    # restart mode pushes the wasted work into the same surfaces
+    eng_r = _engine(groups=1, max_batch=2, pool_streams=1,
+                    evict_mode="restart")
+    [eng_r.submit(p, max_new=26) for p in prompts]
+    _drain(eng_r)
+    kv_r = eng_r.kv_stats()
+    assert kv_r["recompute_tokens"] > 0 and kv_r["spills"] == 0
+    assert sum(s.recompute_tokens for s in eng_r.counters.samples) > 0
+
+
+def test_waitqueue_to_back_regrant_path():
+    """``WaitQueue.to_back`` (the spill regrant path): the victim loses
+    its place, keeps line membership, and its parked-since clock restarts
+    — later waiters are granted first, exactly like a restart eviction's
+    re-admission, but with state intact."""
+    from repro.core.tasks import TaskRuntime, WaitQueue
+
+    def gen():
+        yield
+
+    rt = TaskRuntime(n_pods=1, groups_per_pod=1)
+    t = [0.0]
+    wq = WaitQueue(rt, clock=lambda: t[0])
+    a, b, c = (rt.spawn(gen(), name=n) for n in "abc")
+    wq.park(a)
+    t[0] = 1.0
+    wq.park(b)
+    wq.park(c)
+    t[0] = 2.0
+    wq.to_back(a)
+    assert wq.oldest() is b and wq.youngest() is a
+    assert wq.parked_since(a) == 2.0               # the new wait starts now
+    assert len(wq) == 3 and a in wq
+    wq.to_back(rt.spawn(gen(), name="d"))          # not in line: no-op
+    assert len(wq) == 3
