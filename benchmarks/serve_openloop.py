@@ -24,12 +24,25 @@ one schedule and asserts token identity across them, ``recompute_tokens
 == 0`` in swap mode, and that every restart-mode eviction became a
 spill/restore cycle instead of recompute.
 
+Chunk ticks run on one of TWO COMPILED PATHS (``--prefill-mode``):
+"parallel" (default) fuses a whole C-token chunk into ONE model forward —
+intra-chunk causal attention over the gathered ring prefix plus chunk
+scans for rgLRU/SSD state — while "scan" keeps the per-token reference (C
+sequential model steps per chunk tick).  Whenever the lazy run uses the
+parallel path, a scan twin runs on the same schedule and the benchmark
+asserts token identity plus the model-step claim (1 step per chunk tick
+vs C).  ``--chunk-sweep`` sweeps chunk sizes x both paths at equal byte
+budget (``--prefill-chunk`` pins a single size).
+
     PYTHONPATH=src python benchmarks/serve_openloop.py                  # all 3
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked
     PYTHONPATH=src python benchmarks/serve_openloop.py --eager
+    PYTHONPATH=src python benchmarks/serve_openloop.py --chunk-sweep
     PYTHONPATH=src python benchmarks/serve_openloop.py --smoke          # CI
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
         --evict-mode swap --smoke                                       # CI
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
+        --prefill-mode parallel --smoke                                 # CI
 """
 from __future__ import annotations
 
@@ -72,7 +85,8 @@ def longtail_schedule(seed: int, n: int, mean_gap: float,
     return out
 
 
-def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap"):
+def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap",
+             prefill_mode: str = None, prefill_chunk: int = None):
     topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
     # max_batch is 2x the memory budget's stream count: the paged pool
     # admits by pages actually reserved, not worst-case slots
@@ -81,6 +95,9 @@ def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap"):
         max_batch=max_batch, max_len=args.max_len, adaptive=True, lazy=lazy,
         pool_streams=args.pool_streams, evict_mode=evict_mode,
         headroom=args.headroom,
+        prefill_mode=prefill_mode or args.prefill_mode,
+        prefill_chunk=(prefill_chunk if prefill_chunk is not None
+                       else args.prefill_chunk),
         controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
                                     min_dwell=2))
     eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
@@ -130,8 +147,16 @@ def report(mode: str, args, eng, res):
             eng.cfg, ShapeConfig("kv", "decode", max_prompt, 1), 1)
         emit([row("openloop_prefill_chunk_bytes",
                   kv["prefill_chunk_bytes"],
-                  f"chunks={kv['prefill_chunks']:.0f} vs whole-prompt "
-                  f"buffer {whole:.0f}B at S={max_prompt}")])
+                  f"chunks={kv['prefill_chunks']:.0f} "
+                  f"score_transient={kv['prefill_score_bytes']:.0f}B "
+                  f"vs whole-prompt buffer {whole:.0f}B at S={max_prompt}")])
+    if eng._lazy:
+        emit([row(f"openloop_prefill_model_steps[{mode}]",
+                  kv["prefill_model_steps"],
+                  f"chunk_ticks={kv['chunk_ticks']:.0f} "
+                  f"({eng._prefill_mode}: "
+                  f"{kv['prefill_model_steps'] / max(1, kv['chunk_ticks']):.1f}"
+                  f" model steps per chunk tick, chunk={eng._chunk})")])
     moves = [(r["old_groups"], r["new_groups"], r["blocks_migrated"])
              for r in res["relayouts"]]
     print(f"[{mode}] relayouts (old_groups, new_groups, blocks_migrated): "
@@ -158,6 +183,19 @@ def main():
                     help="stall-watchdog policy for the lazy run: spill "
                          "parked pages to the host tier (swap) or "
                          "recompute from scratch (restart)")
+    ap.add_argument("--prefill-mode", choices=("parallel", "scan"),
+                    default="parallel",
+                    help="chunk-tick compiled path: fuse the whole chunk "
+                         "into ONE model forward (parallel) or scan "
+                         "decode_step per token (scan, the reference)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per prefill chunk (default: one "
+                         "KV page)")
+    ap.add_argument("--chunk-sweep", action="store_true",
+                    help="sweep chunk sizes x {parallel, scan}: TTFT + "
+                         "model steps per chunk tick + honest per-chunk "
+                         "bytes, token identity asserted across every "
+                         "cell")
     ap.add_argument("--headroom", type=int, default=0,
                     help="admission headroom k: grant only when the "
                          "domain keeps k free blocks past the first chunk")
@@ -169,6 +207,33 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
+    if args.chunk_sweep:
+        # chunk-size sweep at equal byte budget: every (C, path) cell must
+        # generate identical tokens; the fused path must hold 1 model step
+        # per chunk tick while the scan reference pays C
+        base = None
+        for C in (4, 8, 16, 24):
+            for pm in ("parallel", "scan"):
+                eng, res = run_mode(args, cfg, lazy=True,
+                                    evict_mode=args.evict_mode,
+                                    prefill_mode=pm, prefill_chunk=C)
+                st = ServeEngine.stats(eng.submitted)
+                kv = eng.kv_stats()
+                toks = [r.generated for r in
+                        sorted(eng.submitted, key=lambda r: r.rid)]
+                if base is None:
+                    base = toks
+                assert toks == base, f"chunk-sweep divergence at C={C} {pm}"
+                per_tick = (kv["prefill_model_steps"]
+                            / max(1, kv["chunk_ticks"]))
+                assert per_tick == (1 if pm == "parallel" else eng._chunk)
+                emit([row(f"sweep_ttft_p50[{pm},C={eng._chunk}]",
+                          st["ttft_p50"] * 1e6,
+                          f"model_steps/chunk_tick={per_tick:.0f} "
+                          f"chunk_bytes={kv['prefill_chunk_bytes']:.0f} "
+                          f"(score={kv['prefill_score_bytes']:.0f}B)")])
+        print("chunk sweep token-identical across sizes and paths: True")
+        return
     # (label, lazy, evict_mode): the default run compares swap-evict lazy
     # against restart-evict lazy AND eager on the same schedule/budget
     modes = []
@@ -194,6 +259,28 @@ def main():
     toks = {m: [e.generated for e in sorted(runs[m].submitted,
                                             key=lambda r: r.rid)]
             for m in runs}
+    if "lazy" in runs and args.prefill_mode == "parallel":
+        # parallel-vs-scan divergence gate: the fused one-forward-per-tick
+        # path must generate the per-token reference's exact tokens, and a
+        # C-token chunk must cost 1 model step (vs C in scan mode)
+        eng_s, res_s = run_mode(args, cfg, lazy=True,
+                                evict_mode=args.evict_mode,
+                                prefill_mode="scan")
+        report("scan-prefill", args, eng_s, res_s)
+        toks_s = [r.generated for r in
+                  sorted(eng_s.submitted, key=lambda r: r.rid)]
+        assert toks["lazy"] == toks_s, \
+            "parallel/scan prefill token divergence"
+        # (the steps metric is structural — derived from which compiled
+        # path ran — so the token-identity assert above is the real gate)
+        kp, ks = kvs["lazy"], eng_s.kv_stats()
+        C = runs["lazy"]._chunk
+        assert kp["prefill_model_steps"] == kp["chunk_ticks"], \
+            "parallel chunk tick took more than one model step"
+        assert ks["prefill_model_steps"] == C * ks["chunk_ticks"], \
+            "scan chunk tick did not pay C model steps"
+        print(f"prefill model steps per chunk tick: parallel=1 scan={C} "
+              f"(chunk={C}); token-identical: True")
     swap_mode = "lazy" if args.evict_mode == "swap" else "swap-evict"
     restart_mode = "restart-evict" if args.evict_mode == "swap" else "lazy"
     if swap_mode in runs and restart_mode in runs:

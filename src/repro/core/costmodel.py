@@ -193,17 +193,52 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
             + (kv_state_bytes(cfg) if with_state else 0.0))
 
 
+def prefill_chunk_score_bytes(cfg: ModelConfig, chunk_tokens: int,
+                              max_len: int = 0) -> float:
+    """f32 attention-score transient ONE stream materializes in the
+    PARALLEL (fused) chunk forward: per query head, TWO live (C, W + C)
+    buffers — the joint score block over [W-slot prior ring, intra-chunk
+    causal] and its softmax probabilities (the per-source partial scores
+    fuse into the concatenation).  Layers run under ``lax.scan``, so only
+    the widest layer's buffers are live at once.  Enc-dec cross-attention
+    runs through BLOCKED (flash) attention, so it adds one
+    (C, block_kv) score block — never the full (C, S_src) matrix (the
+    S_src=4096 convention caps the block).  Zero for pure-state models
+    and for the scan path (whose per-token score rows are negligible)."""
+    if max_len:
+        chunk_tokens = min(chunk_tokens, max_len)
+    C = float(chunk_tokens)
+    hybrid = cfg.family == "hybrid"
+    per_layer = [0.0]
+    for lt in cfg.layer_types():
+        if lt != "attn":
+            continue
+        w = cfg.local_window if hybrid else cfg.window
+        W = min(max_len, w) if (w and max_len) else (w or max_len)
+        b = 2.0 * cfg.n_heads * C * (W + C) * 4.0
+        if cfg.family == "encdec":
+            b += cfg.n_heads * C * min(cfg.attn_block_kv, 4096) * 4.0
+        per_layer.append(b)
+    return max(per_layer)
+
+
 def prefill_chunk_bytes(cfg: ModelConfig, chunk_tokens: int,
-                        max_len: int = 0) -> float:
+                        max_len: int = 0, mode: str = "scan") -> float:
     """Byte-accurate transient footprint of ONE chunked-prefill step: the
     ring KV written for ``chunk_tokens`` new tokens plus the per-stream
     state carried between chunks.  This bounds the outside-the-pool prefill
     buffer regardless of prompt length — the number to compare against the
     ``kv_cache_bytes(prompt)`` single-stream cache that whole-prompt
-    prefill materializes before scattering."""
+    prefill materializes before scattering.  ``mode="parallel"`` adds the
+    fused path's (C, W + C) attention-score transient
+    (``prefill_chunk_score_bytes``), so chunk-size sweeps compare honest
+    footprints across the two compiled paths."""
     if max_len:
         chunk_tokens = min(chunk_tokens, max_len)
-    return chunk_tokens * kv_token_bytes(cfg) + kv_state_bytes(cfg)
+    base = chunk_tokens * kv_token_bytes(cfg) + kv_state_bytes(cfg)
+    if mode == "parallel":
+        base += prefill_chunk_score_bytes(cfg, chunk_tokens, max_len)
+    return base
 
 
 # ---------------------------------------------------------------------------

@@ -299,13 +299,26 @@ def make_serve_step(cfg: ModelConfig, gather_specs=None):
     return serve_step
 
 
-def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None):
+def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None,
+                          mode: str = "scan"):
     """(params, cache, tokens (B,C), pos, n_tokens[, extras]) ->
     (last-active-token logits, cache').  The continuous-batching mixed
     step: prefill chunks and decode streams share one batched call with
-    per-stream lengths (``spec`` is the cache's ``CacheViewSpec``)."""
+    per-stream lengths (``spec`` is the cache's ``CacheViewSpec``).
+
+    ``mode`` selects the SECOND COMPILED PATH: "scan" (the reference —
+    ``chunk_decode_step`` masks a per-token scan of ``decode_step``, bit-
+    identical to single-token stepping, C sequential model steps per
+    chunk) or "parallel" (``prefill_chunk_step`` — one fused multi-token
+    forward per tick, matching the scan to tolerance)."""
+    if mode not in ("scan", "parallel"):
+        raise ValueError(f"unknown chunk-step mode {mode!r}")
 
     def serve_chunk_step(params, cache, tokens, pos, n_tokens, extras=None):
+        if mode == "parallel":
+            return dec.prefill_chunk_step(params, cfg, spec, cache, tokens,
+                                          pos, n_tokens, extras,
+                                          gather_specs=gather_specs)
         return dec.chunk_decode_step(params, cfg, spec, cache, tokens, pos,
                                      n_tokens, extras)
 

@@ -24,7 +24,8 @@ from repro.models import rglru as rglru_mod
 from repro.models import ssd as ssd_mod
 from repro.models.params import hybrid_structure
 from repro.models.transformer import (
-    _attn_out, _ffn, cdt, embed_tokens, forward, head_logits, _rope_for)
+    _attn_out, _attn_proj, _ffn, cdt, embed_tokens, forward, head_logits,
+    _rope_for)
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +307,17 @@ def select_streams(spec: CacheViewSpec, mask, new_cache, old_cache):
     return jax.tree.unflatten(spec.treedef, out)
 
 
+def next_token_ids(logits, n_tokens):
+    """Greedy next token per stream, HARDENED against idle slots: a slot
+    that consumed no tokens this tick (``n_tokens == 0``) yields the -1
+    sentinel — never an argmax-able token id.  Both chunk steps also
+    poison idle rows to NEG_INF, but the engine must not trust a bare
+    ``argmax`` over them (argmax of a constant row is token 0)."""
+    return jnp.where(jnp.asarray(n_tokens) > 0,
+                     jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                     jnp.int32(-1))
+
+
 def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
                       tokens, pos, n_tokens, extras=None):
     """One continuous-batching tick: every stream consumes UP TO C tokens.
@@ -313,16 +325,20 @@ def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
     tokens: (B, C) int32 — stream i's next ``n_tokens[i]`` tokens (prefill
     chunks put a prompt slice here, decode streams put [last_token, ...]);
     pos: (B,) absolute position of tokens[:, 0]; n_tokens: (B,) in [0, C]
-    (0 = idle slot: nothing is computed into its cache).
+    (0 = idle slot: nothing is computed into its cache and its logits row
+    stays poisoned at NEG_INF — see ``next_token_ids``).
 
     Scans ``decode_step`` over the chunk axis with per-stream masking, so a
     stream's math is bit-identical to feeding its tokens one per tick —
     mixing prefill chunks with single-token decode streams in ONE batched
-    model step is then purely a scheduling decision.  Returns
-    (logits (B, V) after each stream's LAST active token, new cache).
+    model step is then purely a scheduling decision.  This is the
+    REFERENCE path: C sequential model steps per tick.  The fused
+    ``prefill_chunk_step`` computes the same chunk in one forward.
+    Returns (logits (B, V) after each stream's LAST active token, new
+    cache).
     """
     B, C = tokens.shape
-    logits0 = jnp.zeros((B, cfg.vocab), jnp.float32)
+    logits0 = jnp.full((B, cfg.vocab), L.NEG_INF, jnp.float32)
 
     def body(carry, t):
         cache, pos_c, logits = carry
@@ -481,6 +497,167 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, extras=None,
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = head_logits(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-token chunk forward (the PARALLEL prefill path)
+# ---------------------------------------------------------------------------
+#
+# ``chunk_decode_step`` above is exact but SEQUENTIAL: a C-token prompt
+# chunk costs C batched model steps inside one tick.  The functions below
+# process the whole chunk in ONE forward — queries (B, C) attend jointly
+# against the pre-chunk ring cache plus the chunk's own keys under an
+# intra-chunk causal mask, and rgLRU/SSD layers run their existing chunk
+# scans over the C axis inside one layer pass.  Per-stream ``n_tokens``
+# masking keeps mixed ticks exact: a decode stream is just a chunk of 1, an
+# idle slot a chunk of 0 (no cache leaf moves, logits poisoned to NEG_INF).
+
+def _chunk_attn_layer(x, lp, lc, cfg: ModelConfig, rope1, pos, n_tokens, *,
+                      window):
+    xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _attn_proj(xin, lp["attn"], rope1, cfg=cfg)
+    o = L.chunk_attention(q, k, v, lc["k"], lc["v"], pos, n_tokens,
+                          window=window)
+    kc, vc = L.cache_update_chunk(lc["k"], lc["v"], k, v, pos, n_tokens)
+    h = x + _attn_out(o, lp["attn"], x.dtype)
+    f, _ = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                dropless=True)
+    return h + f, {"k": kc, "v": vc}
+
+
+def _chunk_layer(x, lp, lc, cfg: ModelConfig, lt: str, rope1, pos, n_tokens,
+                 *, hybrid=False):
+    if lt == "attn":
+        w = cfg.local_window if hybrid else cfg.window
+        return _chunk_attn_layer(x, lp, lc, cfg, rope1, pos, n_tokens,
+                                 window=w)
+    if lt == "rec":
+        r, st = rglru_mod.rglru_chunk_step(
+            L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["rec"], cfg, lc,
+            n_tokens)
+        h = x + r
+        f, _ = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
+                    dropless=True)
+        return h + f, st
+    if lt == "ssd":
+        s, st = ssd_mod.ssd_chunk_step(
+            L.rms_norm(x, lp["ln"], cfg.norm_eps), lp["ssd"], cfg, lc,
+            n_tokens)
+        return x + s, st
+    raise ValueError(lt)
+
+
+def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
+                       tokens, pos, n_tokens, extras=None, gather_specs=None):
+    """One continuous-batching tick as ONE fused multi-token forward.
+
+    Same contract as ``chunk_decode_step`` (tokens (B, C), pos (B,),
+    n_tokens (B,) in [0, C]; returns (last-active-token logits, new
+    cache)) but every stream's chunk is processed in a single model pass:
+    attention scores the whole chunk against [prior ring, intra-chunk
+    causal] jointly (``layers.chunk_attention``), recurrent and SSD layers
+    run their chunk-parallel scans from the carried state.  ~C× fewer
+    sequential model steps per prefill tick, at the cost of a (B, C, W+C)
+    score transient (``costmodel.prefill_chunk_score_bytes``) and numerics
+    that match the scan path to tolerance rather than bit-exactly — the
+    scan stays available as the reference (``prefill_mode="scan"``).
+
+    Masking invariants: active tokens are a per-stream PREFIX of the
+    chunk; an inactive token updates no cache leaf (ring writes are
+    masked, recurrent/SSD steps degrade to identity), and an idle slot
+    (n_tokens == 0) passes its cache through bit-unchanged and gets a
+    NEG_INF-poisoned logits row — ``next_token_ids`` maps it to -1, so an
+    idle slot can never emit a token.  Requires C <= ring width (the
+    engine clamps its chunk; a wider chunk would self-overwrite).
+    """
+    from repro.models.transformer import _wsc_tree
+    extras = extras or {}
+    B, C = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    q_pos = pos[:, None] + jnp.arange(C)[None, :]
+    if cfg.rope_type == "mrope":
+        pid = extras.get("position_ids",
+                         jnp.broadcast_to(q_pos[None], (3, B, C)))
+        rope1 = L.mrope_tables(pid, cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+    elif cfg.rope_type == "none":
+        rope1 = None
+    else:
+        rope1 = L.rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
+
+    if cfg.family == "encdec":
+        def body(x, inp):
+            lp, lc = inp
+            lp = _wsc_tree(lp, gather_specs and gather_specs.get("dec_layers"))
+            # 1. self-attention (ln1): fused chunk over the ring cache
+            xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = _attn_proj(xin, lp["attn"], rope1, cfg=cfg)
+            o = L.chunk_attention(q, k, v, lc["self_c"]["k"],
+                                  lc["self_c"]["v"], pos, n_tokens)
+            kc, vc = L.cache_update_chunk(lc["self_c"]["k"],
+                                          lc["self_c"]["v"], k, v, pos,
+                                          n_tokens)
+            h = x + _attn_out(o, lp["attn"], x.dtype)
+            # 2. cross-attention (ln2): all C queries over static encoder KV
+            xin = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            cq = jnp.einsum("bsd,dhk->bshk", xin, lp["cross"]["wq"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+            co = L.blocked_attention(cq, lc["ck"], lc["cv"], causal=False,
+                                     block_q=cfg.attn_block_q,
+                                     block_kv=cfg.attn_block_kv)
+            h = h + _attn_out(co, lp["cross"], x.dtype)
+            # 3. FFN (ln3)
+            f, _ = _ffn(L.rms_norm(h, lp["ln3"], cfg.norm_eps), lp, cfg,
+                        dropless=True)
+            return h + f, {"k": kc, "v": vc}
+
+        xs = (params["dec_layers"],
+              {"self_c": cache["self"], "ck": cache["cross_k"],
+               "cv": cache["cross_v"]})
+        x, new_self = lax.scan(body, x, xs)
+        new_cache = dict(cache, self=new_self)
+    elif cfg.block_pattern:
+        pattern, n_groups, tail = hybrid_structure(cfg)
+
+        def gbody(x, inp):
+            gp, gc = inp
+            gp = _wsc_tree(gp, gather_specs and gather_specs.get("groups"))
+            new_gc = {}
+            for i, t in enumerate(pattern):
+                nm = f"b{i}_{t}"
+                x, st = _chunk_layer(x, gp[nm], gc[nm], cfg, t, rope1, pos,
+                                     n_tokens, hybrid=True)
+                new_gc[nm] = st
+            return x, new_gc
+
+        x, new_groups = lax.scan(gbody, x, (params["groups"], cache["groups"]))
+        new_tail = {}
+        for nm, lp in params["tail"].items():
+            t = nm.split("_", 1)[1]
+            x, st = _chunk_layer(x, lp, cache["tail"][nm], cfg, t, rope1, pos,
+                                 n_tokens, hybrid=True)
+            new_tail[nm] = st
+        new_cache = {"groups": new_groups, "tail": new_tail}
+    else:
+        lt = cfg.layer_types()[0]
+
+        def body(x, inp):
+            lp, lc = inp
+            lp = _wsc_tree(lp, gather_specs and gather_specs.get("layers"))
+            x, st = _chunk_layer(x, lp, lc, cfg, lt, rope1, pos, n_tokens)
+            return x, st
+
+        x, new_layers = lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(n_tokens - 1, 0, C - 1)
+    xl = jnp.take_along_axis(
+        x, jnp.broadcast_to(last[:, None, None], (B, 1, x.shape[-1])),
+        axis=1)[:, 0]
+    logits = head_logits(params, cfg, xl)
+    logits = jnp.where((n_tokens > 0)[:, None], logits, L.NEG_INF)
     return logits, new_cache
 
 

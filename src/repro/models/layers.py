@@ -357,6 +357,66 @@ def decode_attention(q, k_cache, v_cache, kv_positions, q_pos, *,
     return out.reshape(B, 1, Hq, dh).astype(q.dtype)
 
 
+def chunk_attention(q, k_new, v_new, k_cache, v_cache, pos, n_tokens, *,
+                    window=0, softcap=0.0):
+    """Multi-token chunk attention over a ring cache: ONE fused score
+    computation instead of C sequential decode steps.
+
+    q/k_new/v_new: (B, C, H*, dh) the chunk's projections; k_cache/v_cache:
+    (B, W, Hkv, dh) the ring BEFORE the chunk is written; pos: (B,)
+    absolute position of chunk token 0; n_tokens: (B,) in [0, C].
+
+    Query t (position pos+t) attends jointly over [prior ring, chunk keys
+    t' <= t] under one softmax.  Scoring the prior ring *pre-write* is what
+    makes this exact: a per-token scan would let query t read a slot that a
+    LATER chunk token t' > t has not yet overwritten, and that slot
+    (position pos+t'-W) is inside t's window — so the fused form must score
+    the old contents, not the post-write ring.  Masked entries (idle slots,
+    short chunks, out-of-window) go to NEG_INF; a fully-masked row (idle
+    stream) degrades to a uniform softmax whose output is discarded.
+
+    The (B, H, C, W+C) score block is the transient this buys speed with —
+    priced by ``costmodel.prefill_chunk_score_bytes``.
+    """
+    B, C, Hq, dh = q.shape
+    W, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = dh ** -0.5
+    qg = q.reshape(B, C, Hkv, G, dh)
+    t = jnp.arange(C)
+    q_pos = pos[:, None] + t[None, :]                       # (B, C)
+    # prior ring: positions held BEFORE the chunk (pos-1 = last written)
+    kv_pos = cache_positions(pos - 1, W)                    # (B, W)
+    s_prior = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                         preferred_element_type=jnp.float32) * scale
+    s_chunk = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_new,
+                         preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s_prior = softcap * jnp.tanh(s_prior / softcap)
+        s_chunk = softcap * jnp.tanh(s_chunk / softcap)
+    # the ring width is an IMPLICIT window: sequential stepping overwrites
+    # position p-W when writing p, so query t must not see prior entries
+    # at kv_pos <= q_pos - W that its own chunk's earlier tokens would
+    # already have evicted (exact match with ring-eviction semantics even
+    # for full-attention models whose context exceeds the ring)
+    vp = (kv_pos[:, None, :] >= 0) \
+        & (kv_pos[:, None, :] <= q_pos[:, :, None]) \
+        & (kv_pos[:, None, :] > q_pos[:, :, None] - W)
+    vc = (t[None, :] <= t[:, None])[None] \
+        & (t[None, None, :] < n_tokens[:, None, None])
+    if window:
+        vp &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+        vc &= (t[None, :] > t[:, None] - window)[None]
+    s_prior = jnp.where(vp[:, None, None], s_prior, NEG_INF)
+    s_chunk = jnp.where(vc[:, None, None], s_chunk, NEG_INF)
+    s = jnp.concatenate([s_prior, s_chunk], axis=-1)        # (B,Hkv,G,C,W+C)
+    p = jax.nn.softmax(s, axis=-1)
+    vcat = jnp.concatenate([v_cache, v_new], axis=1)        # (B, W+C, Hkv, dh)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vcat,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, Hq, dh).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Ring-buffer KV cache helpers
 # ---------------------------------------------------------------------------
@@ -374,6 +434,34 @@ def cache_update(k_cache, v_cache, k_new, v_new, pos):
 
     k_cache = jax.vmap(upd)(k_cache, k_new, slot)
     v_cache = jax.vmap(upd)(v_cache, v_new, slot)
+    return k_cache, v_cache
+
+
+def cache_update_chunk(k_cache, v_cache, k_new, v_new, pos, n_tokens):
+    """Write up to C tokens per stream at ring slots (pos+t) % W, masked.
+
+    caches: (B, W, Hkv, dh); k_new/v_new: (B, C, Hkv, dh); pos: (B,)
+    position of chunk token 0; n_tokens: (B,) in [0, C] — tokens past a
+    stream's count write their slot's OLD value back (bit-exact no-op), so
+    idle and short-chunk streams leave the ring untouched.  Requires
+    C <= W: the C consecutive positions then map to distinct slots (a
+    chunk wider than the ring would overwrite itself mid-write, which only
+    the sequential scan path can express).
+    """
+    B, C = k_new.shape[:2]
+    W = k_cache.shape[1]
+    if C > W:
+        raise ValueError(f"chunk of {C} tokens exceeds ring width {W}: "
+                         "use the scan path or clamp the chunk")
+    slots = (pos[:, None] + jnp.arange(C)[None, :]) % W     # (B, C)
+    active = jnp.arange(C)[None, :] < n_tokens[:, None]     # (B, C)
+
+    def upd(c, new, sl, act):
+        cur = jnp.take(c, sl, axis=0)                       # (C, Hkv, dh)
+        return c.at[sl].set(jnp.where(act[:, None, None], new, cur))
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, slots, active)
+    v_cache = jax.vmap(upd)(v_cache, v_new, slots, active)
     return k_cache, v_cache
 
 

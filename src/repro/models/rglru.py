@@ -85,6 +85,55 @@ def rglru_block_apply(x, params, cfg, *, unroll=False):
     return y, state
 
 
+def rglru_chunk_step(x, params, cfg, state, n_tokens):
+    """Multi-token chunk step from a CARRIED state (serving fused prefill).
+
+    x: (B, C, D); state as in ``rglru_decode_step``; n_tokens: (B,) in
+    [0, C] — active tokens are a prefix of the chunk.  The recurrence is
+    the same associative scan ``rglru_block_apply`` uses, seeded with the
+    carried ``h`` as a virtual timestep (a=1, b=h0); inactive tokens are
+    forced to identity (log_a=0 -> a=1, beta=0) so the final carry equals
+    the state after each stream's LAST active token, and the conv state is
+    gathered at the per-stream active length.  One layer pass for C tokens
+    instead of C sequential ``rglru_decode_step`` calls.
+    """
+    B, C, _ = x.shape
+    K = cfg.conv_width
+    active = jnp.arange(C)[None, :] < n_tokens[:, None]         # (B, C)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate"],
+                   preferred_element_type=jnp.float32), approximate=True)
+    u_raw = jnp.einsum("bsd,dw->bsw", x, params["w_in"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    # conv over [carried K-1 inputs, chunk]: each chunk position sees the
+    # true K-token history, exactly like C conv1d_step calls
+    ext = jnp.concatenate([state["conv"], u_raw], axis=1)       # (B, K-1+C, W)
+    u = causal_conv1d(ext, params["conv_w"], params["conv_b"])[:, K - 1:]
+    log_a, i_gate = _gates(u, params)
+    log_a = jnp.where(active[..., None], log_a, 0.0)            # identity step
+    i_gate = jnp.where(active[..., None], i_gate, 0.0)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0))
+    b = beta * (i_gate * u.astype(jnp.float32))
+    a_ext = jnp.concatenate([jnp.ones_like(b[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([state["h"][:, None, :], b], axis=1)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_ext = lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    h = h_ext[:, 1:]                                            # (B, C, W) f32
+    out = (h * gate).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", out, params["w_out"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    # conv carry = last K-1 inputs of [old state, active prefix]
+    idx = n_tokens[:, None] + jnp.arange(K - 1)[None, :]        # (B, K-1)
+    new_conv = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+    return y, {"h": h[:, -1], "conv": new_conv}
+
+
 def rglru_decode_step(x_t, params, cfg, state):
     """x_t: (B,1,D); state: {"h": (B,W) f32, "conv": (B,K-1,W)}."""
     gate = jax.nn.gelu(

@@ -34,10 +34,13 @@ def segsum(a):
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B_, C_, *, chunk: int, unroll: bool = False):
+def ssd_chunked(x, dt, A, B_, C_, *, chunk: int, unroll: bool = False,
+                initial_state=None):
     """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,); B_/C_: (B,S,G,N).
 
     Returns y: (B,S,H,P) and final state (B,H,P,N).  Math in f32.
+    ``initial_state`` seeds the inter-chunk recurrence (serving chunk
+    steps resume from a carried state; None = zeros, the prefill case).
     """
     Bb, S, H, P = x.shape
     G, N = B_.shape[2], B_.shape[3]
@@ -75,7 +78,8 @@ def ssd_chunked(x, dt, A, B_, C_, *, chunk: int, unroll: bool = False):
         h_new = h * jnp.exp(atot)[..., None, None] + s_c
         return h_new, h                                     # emit state *before* chunk
 
-    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bb, H, P, N), jnp.float32))
     if unroll:
         hs, h = [], h0
         for c in range(nc):
@@ -159,6 +163,73 @@ def ssd_init_state(cfg, batch, dtype=jnp.float32):
         "conv_B": jnp.zeros((batch, K - 1, G * N), dtype),
         "conv_C": jnp.zeros((batch, K - 1, G * N), dtype),
     }
+
+
+def ssd_chunk_step(x, params, cfg, state, n_tokens):
+    """Multi-token chunk step from a CARRIED state (serving fused prefill).
+
+    x: (B, C, D); state from ``ssd_init_state``; n_tokens: (B,) in [0, C]
+    (active tokens are a prefix).  Runs the same chunked SSD form as
+    ``ssd_block_apply`` — dense per-chunk matmuls + the tiny inter-chunk
+    scan — but seeded with the carried SSM state and with the three conv
+    front-ends resumed from their carried tails.  Inactive tokens are
+    masked via dt=0 (decay 1, zero input), so the final state equals the
+    state after each stream's last active token; front-padding to the SSD
+    chunk multiple is exact for the same reason.  Uses the jnp path (the
+    Pallas kernel has no initial-state entry point; serving chunks are
+    small).
+    """
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Bb, C, _ = x.shape
+    K = cfg.conv_width
+    active = jnp.arange(C)[None, :] < n_tokens[:, None]
+    z = jnp.einsum("bsd,dk->bsk", x, params["wz"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    def piece(w, conv_w, conv_b, st):
+        h = jnp.einsum("bsd,dk->bsk", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        ext = jnp.concatenate([st, h], axis=1)          # (B, K-1+C, k)
+        idx = n_tokens[:, None] + jnp.arange(K - 1)[None, :]
+        tail = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+        hc = causal_conv1d(ext, conv_w, conv_b)[:, K - 1:]
+        return jax.nn.silu(hc.astype(jnp.float32)).astype(x.dtype), tail
+
+    xs, cx = piece(params["wx"], params["conv_x"], params["bx"],
+                   state["conv_x"])
+    B_, cb = piece(params["wB"], params["conv_B"], params["bB"],
+                   state["conv_B"])
+    C_, cc = piece(params["wC"], params["conv_C"], params["bC"],
+                   state["conv_C"])
+    dtr = jnp.einsum("bsd,dh->bsh", x, params["wdt"],
+                     preferred_element_type=jnp.float32)
+    dtv = jax.nn.softplus(dtr + params["dt_bias"].astype(jnp.float32))
+    dtv = jnp.where(active[..., None], dtv, 0.0)        # identity step
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xs = xs.reshape(Bb, C, H, P)
+    B_ = B_.reshape(Bb, C, G, N)
+    C_ = C_.reshape(Bb, C, G, N)
+    chunk = min(cfg.ssd_chunk, C)
+    pad = (-C) % chunk
+    if pad:  # front-pad with dt=0 steps: state passes through unchanged
+        xs = jnp.pad(xs, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (pad, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    y, h = ssd_chunked(xs, dtv, A, B_, C_, chunk=chunk,
+                       initial_state=state["ssm"])
+    if pad:
+        y = y[:, pad:]
+        xs = xs[:, pad:]
+    y = y.astype(jnp.float32) + xs.astype(jnp.float32) \
+        * params["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bb, C, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"ssm": h, "conv_x": cx, "conv_B": cb, "conv_C": cc}
 
 
 def ssd_decode_step(x_t, params, cfg, state):

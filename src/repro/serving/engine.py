@@ -11,7 +11,14 @@ ARCAS mapping (the paper's runtime, applied to inference):
     of prefill CHUNKS (page-sized slices of prompts scattered into the pool
     page-by-page, so prefill memory is bounded by one chunk regardless of
     prompt length) and single-token decode streams — there is no separate
-    prefill phase, just streams at different positions in one loop;
+    prefill phase, just streams at different positions in one loop.  Chunk
+    ticks run on one of TWO COMPILED PATHS
+    (``EngineConfig(prefill_mode=)``): "parallel" (default) fuses the
+    whole chunk into one model forward — intra-chunk causal attention
+    against the gathered ring prefix, chunk scans for rgLRU/SSD state —
+    so a C-token chunk costs ONE model step; "scan" keeps the per-token
+    reference (C sequential steps, bit-identical to single-token
+    stepping).  Pure-decode ticks use the single-token step either way;
   * KV reservations are ELASTIC: admission takes only the pages of the
     first chunk plus the state slot, and the table GROWS lazily as ``pos``
     crosses page boundaries.  When a stream's domain is exhausted MID-
@@ -88,7 +95,8 @@ from repro.core.tasks import BLOCK, WaitQueue
 from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
-from repro.core.costmodel import prefill_chunk_bytes
+from repro.core.costmodel import prefill_chunk_bytes, \
+    prefill_chunk_score_bytes
 from repro.launch.steps import make_prefill, make_serve_chunk_step, \
     make_serve_step
 from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
@@ -135,6 +143,15 @@ class EngineConfig:
     block_tokens: int = 16             # ring tokens per KV page
     prefill_chunk: Optional[int] = None  # prompt tokens per prefill chunk;
                                          # default: one KV page
+    prefill_mode: str = "parallel"     # chunk-tick compiled path: "parallel"
+                                       # fuses the whole chunk into ONE
+                                       # model forward (intra-chunk causal
+                                       # attention + chunk scans for
+                                       # rgLRU/SSD state); "scan" keeps the
+                                       # PR-3 per-token reference (C
+                                       # sequential model steps per chunk,
+                                       # bit-identical to single-token
+                                       # stepping)
     pool_streams: Optional[int] = None  # per-DOMAIN budget, expressed as
                                         # full-length streams (monolith
                                         # equivalence); default max_batch
@@ -251,6 +268,9 @@ class ServeEngine:
         self._lazy = ecfg.paged and ecfg.lazy
         if ecfg.evict_mode not in ("swap", "restart"):
             raise ValueError(f"unknown evict_mode {ecfg.evict_mode!r}")
+        if ecfg.prefill_mode not in ("parallel", "scan"):
+            raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
+        self._prefill_mode = ecfg.prefill_mode if self._lazy else "scan"
         self._parked: Dict[int, _Parked] = {}
         self._park_seq = itertools.count()
         self._progress_mark = -1.0
@@ -280,9 +300,15 @@ class ServeEngine:
             self._chunk = ecfg.prefill_chunk or (
                 self.pool.block_tokens if self.pool.pages_per_stream
                 else ecfg.block_tokens)
+            if self._prefill_mode == "parallel" and self.pool.spec.width:
+                # the fused forward writes C distinct ring slots in one
+                # scatter: a chunk wider than the ring would overwrite
+                # itself mid-chunk (only the scan path can express that)
+                self._chunk = min(self._chunk, self.pool.spec.width)
             if self._lazy:
-                self._paged_chunk = jax.jit(self._make_paged_chunk(),
-                                            donate_argnums=(1,))
+                self._paged_chunk = jax.jit(
+                    self._make_paged_chunk(self._prefill_mode),
+                    donate_argnums=(1,))
         else:
             self._kv_fn = None
             self._chunk = 1
@@ -521,11 +547,13 @@ class ServeEngine:
 
         return paged_decode
 
-    def _make_paged_chunk(self):
+    def _make_paged_chunk(self, mode: str = "scan"):
         """The continuous-batching mixed step: prefill chunks and decode
-        streams share one gather -> chunked-masked step -> scatter."""
+        streams share one gather -> chunked-masked step -> scatter.
+        ``mode="parallel"`` compiles the fused multi-token forward (one
+        model pass per tick); "scan" the per-token reference."""
         spec = self.pool.spec
-        step = make_serve_chunk_step(self.cfg, spec)
+        step = make_serve_chunk_step(self.cfg, spec, mode=mode)
 
         def paged_chunk(params, storage, tables, state_slots, tokens, pos,
                         n_tokens):
@@ -875,6 +903,15 @@ class ServeEngine:
             logits, self.pool.storage = self._paged_chunk(
                 self.params, self.pool.storage, tables, slots1,
                 jnp.asarray(toks), pos_j, jnp.asarray(n_h))
+            # model-step accounting, STRUCTURAL (by construction of the
+            # compiled path, not measured at runtime): the fused path is
+            # one forward per tick, the scan path a length-C lax.scan of
+            # decode_step.  The benchmark's parallel-vs-scan token
+            # identity is the behavioral gate; this feeds the C× metric.
+            self.counters.add("chunk_ticks", 1)
+            self.counters.add(
+                "prefill_model_steps",
+                1 if self._prefill_mode == "parallel" else C)
         else:
             tokens = jnp.asarray(toks)
             if self.ecfg.paged:
@@ -884,7 +921,9 @@ class ServeEngine:
             else:
                 logits, g.cache = self._decode(self.params, g.cache, tokens,
                                                pos_j)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # idle-slot hardening: slots with n == 0 get the -1 sentinel, never
+        # an argmax over a constant (all-zero / all-NEG_INF) logits row
+        nxt = np.asarray(dec.next_token_ids(logits, jnp.asarray(n_h)))
         g.steps += 1
         now = self._clock()
         for i in range(B):
@@ -907,6 +946,7 @@ class ServeEngine:
                 req.t_first = now
                 self.counters.add("prefills", 1)
             tok = int(nxt[i])
+            assert tok >= 0, f"idle slot {i} emitted a token"
             req.generated.append(tok)
             g.tok_h[i] = tok
             if self.ecfg.paged:
@@ -990,9 +1030,18 @@ class ServeEngine:
             return {}
         s = self.pool.stats()
         # the pool defaults this to one page; the engine knows the real
-        # configured chunk size (prefill_chunk may span several pages)
+        # configured chunk size (prefill_chunk may span several pages) and
+        # the compiled path (parallel adds the fused score transient)
         s["prefill_chunk_bytes"] = prefill_chunk_bytes(
-            self.cfg, self._chunk, self.ecfg.max_len)
+            self.cfg, self._chunk, self.ecfg.max_len,
+            mode=self._prefill_mode)
+        s["prefill_score_bytes"] = (
+            prefill_chunk_score_bytes(self.cfg, self._chunk,
+                                      self.ecfg.max_len)
+            if self._prefill_mode == "parallel" else 0.0)
+        s["prefill_model_steps"] = self.counters.totals.get(
+            "prefill_model_steps", 0.0)
+        s["chunk_ticks"] = self.counters.totals.get("chunk_ticks", 0.0)
         s["evictions"] = self.counters.totals.get("kv_evictions", 0.0)
         s["recompute_tokens"] = self.counters.totals.get(
             "recompute_tokens", 0.0)

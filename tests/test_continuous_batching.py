@@ -241,6 +241,151 @@ def test_lazy_relayout_migrates_partial_tables():
 
 
 # ---------------------------------------------------------------------------
+# parallel (fused) vs scan chunk path (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = ("llama3-8b", "mixtral-8x22b", "mamba2-780m",
+                "recurrentgemma-9b", "seamless-m4t-large-v2")
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10**6), arch=st.sampled_from(FAMILY_ARCHS))
+def test_parallel_scan_chunk_identity_property(seed, arch):
+    """The fused multi-token forward (``prefill_chunk_step``) matches the
+    per-token scan reference (``chunk_decode_step``) within tolerance on
+    logits AND every cache leaf, for random chunks over a randomly warmed
+    ring — across dense / MoE / SSM / hybrid / enc-dec families, with
+    mixed per-stream lengths including a decode stream (n=1) and an idle
+    slot (n=0), and with positions deep enough to wrap the ring."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import decode as dec
+    from repro.models.params import init_params
+    cfg = reduced_config(REGISTRY[arch])
+    rng = np.random.default_rng(seed)
+    B, C, max_len = 3, 6, 16
+    src = 6 if cfg.family == "encdec" else 0
+    params = init_params(cfg, jax.random.PRNGKey(seed % 7))
+    spec = dec.cache_view_specs(cfg, max_len, src)
+    cache = dec.init_cache(cfg, B, max_len, src)
+    if cfg.family == "encdec":
+        key = jax.random.PRNGKey(seed % 11)
+        for leaf in ("cross_k", "cross_v"):
+            cache[leaf] = 0.1 * jax.random.normal(
+                key, cache[leaf].shape, cache[leaf].dtype)
+    # warm each stream to a random depth (possibly past the ring width)
+    # with the trusted scan path, then compare ONE chunk step
+    warm = int(rng.integers(0, max_len + 4))
+    pos = jnp.zeros((B,), jnp.int32)
+    if warm:
+        wt = jnp.asarray(rng.integers(2, cfg.vocab, size=(B, warm)),
+                         jnp.int32)
+        nw = jnp.asarray([warm, max(1, warm // 2), warm], jnp.int32)
+        _, cache = dec.chunk_decode_step(params, cfg, spec, cache, wt, pos,
+                                         nw)
+        pos = nw
+    toks = jnp.asarray(rng.integers(2, cfg.vocab, size=(B, C)), jnp.int32)
+    nt = jnp.asarray([C, 1, 0], jnp.int32)   # prefill chunk, decode, idle
+    lg_s, c_s = dec.chunk_decode_step(params, cfg, spec, cache, toks, pos,
+                                      nt)
+    lg_p, c_p = dec.prefill_chunk_step(params, cfg, spec, cache, toks, pos,
+                                       nt)
+    act = np.asarray(nt) > 0
+    np.testing.assert_allclose(np.asarray(lg_p)[act], np.asarray(lg_s)[act],
+                               rtol=2e-2, atol=2e-3)
+    assert np.asarray(lg_p)[~act].max() <= -1e29      # idle rows poisoned
+    for a, b in zip(jax.tree.leaves(c_p), jax.tree.leaves(c_s)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_parallel_prefill_one_model_step_per_chunk_tick():
+    """The acceptance claim at test scale: a C-token prompt chunk costs
+    ONE model forward on the parallel path and C sequential steps on the
+    scan reference — token-identically."""
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(2, CFG.vocab, size=s) for s in (30, 20, 5)]
+    max_new = [4, 6, 3]
+    outs = {}
+    for pm in ("parallel", "scan"):
+        eng, reqs, _ = _run(prompts, max_new, lazy=True, groups=2,
+                            prefill_mode=pm)
+        outs[pm] = [r.generated for r in reqs]
+        kv = eng.kv_stats()
+        assert kv["chunk_ticks"] > 0
+        expect = 1 if pm == "parallel" else eng._chunk
+        assert kv["prefill_model_steps"] == expect * kv["chunk_ticks"], pm
+    assert outs["parallel"] == outs["scan"]
+
+
+def test_parallel_mid_chunk_park_token_identity():
+    """A stream that PARKS while still mid-prompt (growth fails at a chunk
+    boundary inside the prefill) under the FUSED path resumes at its chunk
+    cursor and stays token-identical to the scan path and to the eager
+    whole-prompt run — the spill/park machinery is path-agnostic."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, CFG.vocab, size=30) for _ in range(2)]
+    max_new = [4, 4]
+    outs = {}
+    for pm in ("parallel", "scan"):
+        eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1,
+                              max_batch=2, prefill_mode=pm)
+        c = res["counters"]
+        assert c.get("kv_mid_decode_parks", 0) >= 1, pm
+        assert eng.pool.occupancy() == 0.0
+        outs[pm] = [r.generated for r in reqs]
+    _, reqs_e, _ = _run(prompts, max_new, lazy=False, groups=1)
+    assert outs["parallel"] == outs["scan"] == \
+        [r.generated for r in reqs_e]
+
+
+def test_parallel_chunk_spanning_pages_token_identity():
+    """``prefill_chunk`` above the page size (a chunk whose growth commits
+    2 pages mid-chunk) and below it both stay token-identical across the
+    two compiled paths — the chunk-size sweep's correctness core."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, CFG.vocab, size=s) for s in (28, 9)]
+    max_new = [3, 5]
+    base = None
+    for chunk in (6, 24):
+        for pm in ("parallel", "scan"):
+            _, reqs, _ = _run(prompts, max_new, lazy=True, groups=1,
+                              max_len=32, prefill_mode=pm,
+                              prefill_chunk=chunk)
+            toks = [r.generated for r in reqs]
+            base = base or toks
+            assert toks == base, (chunk, pm)
+
+
+def test_idle_slot_logits_are_poisoned_not_argmaxable():
+    """ISSUE 5 bugfix regression: pre-fix, ``chunk_decode_step``
+    initialized idle-slot logits to ZEROS, whose argmax is token 0 — a
+    perfectly plausible token id at the engine's append site.  Both chunk
+    paths must poison idle rows to NEG_INF and ``next_token_ids`` must map
+    them to the -1 sentinel, so an idle slot can never append a token in
+    any mode (the engine additionally asserts ``tok >= 0`` on append)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import decode as dec
+    from repro.models.params import init_params
+    max_len = 16
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    spec = dec.cache_view_specs(CFG, max_len)
+    cache = dec.init_cache(CFG, 2, max_len)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        2, CFG.vocab, size=(2, 4)), jnp.int32)
+    nt = jnp.asarray([4, 0], jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    for step in (dec.chunk_decode_step, dec.prefill_chunk_step):
+        lg, _ = step(params, CFG, spec, cache, toks, pos, nt)
+        lg = np.asarray(lg)
+        assert lg[1].max() <= -1e29, step.__name__    # no argmax-able row
+        ids = np.asarray(dec.next_token_ids(jnp.asarray(lg), nt))
+        assert ids[1] == -1 and ids[0] >= 0, step.__name__
+
+
+# ---------------------------------------------------------------------------
 # counters / stats surface + cost model
 # ---------------------------------------------------------------------------
 
@@ -286,6 +431,37 @@ def test_prefill_chunk_bytes_costmodel():
     ssm = reduced_config(REGISTRY["mamba2-780m"])
     assert kv_token_bytes(ssm) == 0
     assert prefill_chunk_bytes(ssm, 16) == pytest.approx(kv_state_bytes(ssm))
+
+
+def test_prefill_chunk_score_bytes_costmodel():
+    """The parallel path's (C, W + C) f32 score transient, hand-computed
+    for one dense and one hybrid config (ISSUE 5 satellite) — and
+    ``prefill_chunk_bytes(mode="parallel")`` must price it on top of the
+    scan footprint so chunk sweeps compare honest bytes."""
+    from repro.core.costmodel import (prefill_chunk_bytes,
+                                      prefill_chunk_score_bytes)
+    # dense (llama smoke): full attention -> ring width W = max_len = 32;
+    # 4 query heads, C=8 queries x (32 prior + 8 chunk) f32 scores, two
+    # live buffers (joint scores + softmax probabilities)
+    assert prefill_chunk_score_bytes(CFG, 8, max_len=32) == \
+        pytest.approx(2 * 4 * 8 * (32 + 8) * 4.0)
+    # hybrid (recurrentgemma smoke): attn layers use local_window=32,
+    # ring W = min(max_len=16, 32) = 16; recurrent layers add no scores
+    hyb = reduced_config(REGISTRY["recurrentgemma-9b"])
+    assert hyb.local_window == 32 and hyb.n_heads == 4
+    assert prefill_chunk_score_bytes(hyb, 8, max_len=16) == \
+        pytest.approx(2 * 4 * 8 * (16 + 8) * 4.0)
+    # pure-state model: no attention scores at all
+    ssm = reduced_config(REGISTRY["mamba2-780m"])
+    assert prefill_chunk_score_bytes(ssm, 8, max_len=16) == 0.0
+    # parallel footprint = scan footprint + score transient; a chunk never
+    # exceeds the ring in either term
+    for cfg, ml in ((CFG, 32), (hyb, 16)):
+        assert prefill_chunk_bytes(cfg, 8, ml, mode="parallel") == \
+            pytest.approx(prefill_chunk_bytes(cfg, 8, ml)
+                          + prefill_chunk_score_bytes(cfg, 8, ml))
+    assert prefill_chunk_score_bytes(CFG, 64, max_len=16) == \
+        pytest.approx(prefill_chunk_score_bytes(CFG, 16, max_len=16))
 
 
 def test_waitqueue_order_accessors():

@@ -402,6 +402,74 @@ def test_spill_carries_state_leaves_hybrid_model():
     assert pool.spilled_tables == 0 and pool.spilled_bytes == 0.0
 
 
+def test_parallel_spill_mid_prefill_token_identity():
+    """Spill-while-mid-prefill under the FUSED (parallel) chunk path
+    (ISSUE 5): a stream spilled with its cursor inside the prompt restores
+    and finishes from that chunk boundary, token-identical to the scan
+    reference and to an uncontended baseline."""
+    r = np.random.default_rng(0)
+    sched = []
+    for _ in range(4):
+        gap = int(r.integers(0, 6))
+        plen = int(r.integers(3, 31))
+        mx = int(r.integers(2, 28))
+        sched.append((gap, r.integers(2, CFG.vocab, size=plen), mx))
+    spilled_at = []
+
+    def run(streams, pmode):
+        eng = _engine(groups=1, max_batch=2, pool_streams=streams,
+                      block_tokens=8, prefill_mode=pmode)
+        orig_spill = eng.pool.spill
+
+        def spy(table):
+            for rec in eng._parked.values():
+                if rec.req.table is table:
+                    spilled_at.append((rec.pos, len(rec.req.prompt)))
+            return orig_spill(table)
+
+        eng.pool.spill = spy
+        eng.open_loop_client(list(sched))
+        _drain(eng)
+        return [req.generated for req in
+                sorted(eng.submitted, key=lambda q: q.rid)]
+
+    toks_p = run(1, "parallel")
+    assert any(pos < plen for pos, plen in spilled_at), \
+        f"no mid-prefill spill happened: {spilled_at}"
+    assert toks_p == run(1, "scan")            # fused == per-token scan
+    assert toks_p == run(8, "parallel")        # uncontended baseline
+
+
+def test_parallel_relayout_between_chunks_token_identity():
+    """A forced relayout firing BETWEEN chunk ticks of the fused path
+    (streams mid-prefill with partially-grown tables) re-points tables /
+    copies used pages exactly as in scan mode: adaptive parallel,
+    non-adaptive parallel and non-adaptive scan all generate the same
+    tokens."""
+    from repro.core.controller import ControllerConfig
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, CFG.vocab, size=int(rng.integers(4, 20)))
+               for _ in range(12)]
+    max_new = [2 if i % 4 == 0 else 10 for i in range(12)]
+
+    def run(adaptive, pmode):
+        eng = _engine(groups=4, max_batch=1, pool_streams=4,
+                      adaptive=adaptive, prefill_mode=pmode,
+                      controller=ControllerConfig(scheduler_timer=3,
+                                                  threshold=1.0,
+                                                  min_dwell=1))
+        reqs = [eng.submit(p, max_new=m) for p, m in zip(prompts, max_new)]
+        res = _drain(eng)
+        return [r.generated for r in reqs], res
+
+    toks_a, res_a = run(True, "parallel")
+    assert len(res_a["relayouts"]) >= 1        # really relayouted mid-run
+    toks_b, res_b = run(False, "parallel")
+    assert res_b["relayouts"] == []
+    toks_c, _ = run(False, "scan")
+    assert toks_a == toks_b == toks_c
+
+
 # ---------------------------------------------------------------------------
 # pool-level mechanics
 # ---------------------------------------------------------------------------
