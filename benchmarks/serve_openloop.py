@@ -31,8 +31,18 @@ scans for rgLRU/SSD state — while "scan" keeps the per-token reference (C
 sequential model steps per chunk tick).  Whenever the lazy run uses the
 parallel path, a scan twin runs on the same schedule and the benchmark
 asserts token identity plus the model-step claim (1 step per chunk tick
-vs C).  ``--chunk-sweep`` sweeps chunk sizes x both paths at equal byte
-budget (``--prefill-chunk`` pins a single size).
+vs C).  The parallel path's attention runs on one of two kernels
+(``--chunk-kernel``): "blocked" (default) streams the ring + chunk KV
+through a Pallas online-softmax kernel in (block_q, block_kv) tiles,
+"dense" materializes the full (C, W + C) einsum score block.  Mixed ticks
+(prefill chunks and decoders in one batch) split into two compiled steps
+by default (``--no-split-ticks`` pads decoders into the chunk forward
+instead, paying C-1 masked query rows each).  The default parallel run
+adds a kernel twin and a split twin on the same schedule and asserts
+token identity, the blocked < dense transient claim, and zero masked
+decode rows under splitting.  ``--chunk-sweep`` sweeps chunk sizes x
+{path, kernel, split} at equal byte budget (``--prefill-chunk`` pins a
+single size).
 
     PYTHONPATH=src python benchmarks/serve_openloop.py                  # all 3
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked
@@ -43,6 +53,8 @@ budget (``--prefill-chunk`` pins a single size).
         --evict-mode swap --smoke                                       # CI
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
         --prefill-mode parallel --smoke                                 # CI
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
+        --chunk-kernel dense --no-split-ticks --smoke
 """
 from __future__ import annotations
 
@@ -58,7 +70,8 @@ from common import emit, row
 
 from repro.configs import REGISTRY, reduced_config
 from repro.core.controller import ControllerConfig
-from repro.core.costmodel import kv_cache_bytes, prefill_chunk_bytes
+from repro.core.costmodel import (fwd_flops_per_token, kv_cache_bytes,
+                                  prefill_chunk_bytes)
 from repro.configs.base import ShapeConfig
 from repro.core.topology import ChipletTopology
 from repro.serving.engine import EngineConfig, ServeEngine
@@ -86,7 +99,8 @@ def longtail_schedule(seed: int, n: int, mean_gap: float,
 
 
 def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap",
-             prefill_mode: str = None, prefill_chunk: int = None):
+             prefill_mode: str = None, prefill_chunk: int = None,
+             chunk_kernel: str = None, split_ticks: bool = None):
     topo = ChipletTopology(n_pods=1, groups_per_pod=4, chips_per_group=1)
     # max_batch is 2x the memory budget's stream count: the paged pool
     # admits by pages actually reserved, not worst-case slots
@@ -98,6 +112,9 @@ def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap",
         prefill_mode=prefill_mode or args.prefill_mode,
         prefill_chunk=(prefill_chunk if prefill_chunk is not None
                        else args.prefill_chunk),
+        chunk_kernel=chunk_kernel or args.chunk_kernel,
+        split_ticks=(args.split_ticks if split_ticks is None
+                     else split_ticks),
         controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
                                     min_dwell=2))
     eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
@@ -156,7 +173,21 @@ def report(mode: str, args, eng, res):
                   f"chunk_ticks={kv['chunk_ticks']:.0f} "
                   f"({eng._prefill_mode}: "
                   f"{kv['prefill_model_steps'] / max(1, kv['chunk_ticks']):.1f}"
-                  f" model steps per chunk tick, chunk={eng._chunk})")])
+                  f" model steps per chunk tick, chunk={eng._chunk}, "
+                  f"kernel={kv['chunk_kernel']})")])
+    if eng._lazy and eng._prefill_mode == "parallel":
+        # masked decode-query rows a mixed tick would have paid in the
+        # fused chunk forward, priced as forward FLOPs at ring depth
+        saved_rows = kv["mixed_tick_decode_rows_saved"]
+        n_split = res["counters"].get("split_ticks", 0)
+        flops_per_row = fwd_flops_per_token(eng.cfg, args.max_len,
+                                            decode=True)
+        emit([row(f"openloop_split_ticks[{mode}]", n_split,
+                  f"decode_rows_saved={saved_rows:.0f} "
+                  f"(~{saved_rows * flops_per_row / 1e6:.1f} MFLOP, "
+                  f"{saved_rows * flops_per_row / max(1, n_split) / 1e6:.1f}"
+                  f" MFLOP/split-tick); residual masked rows="
+                  f"{kv['decode_masked_query_rows']:.0f}")])
     moves = [(r["old_groups"], r["new_groups"], r["blocks_migrated"])
              for r in res["relayouts"]]
     print(f"[{mode}] relayouts (old_groups, new_groups, blocks_migrated): "
@@ -191,6 +222,19 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens per prefill chunk (default: one "
                          "KV page)")
+    ap.add_argument("--chunk-kernel", choices=("blocked", "dense"),
+                    default="blocked",
+                    help="fused-path attention kernel: the Pallas "
+                         "online-softmax ring kernel (blocked, one "
+                         "(block_q, block_kv) tile live) or the einsum "
+                         "reference (dense, a full (C, W+C) score block)")
+    ap.add_argument("--split-ticks", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run mixed ticks as TWO compiled steps — a fused "
+                         "chunk step for prefilling streams plus a "
+                         "single-token step for decoders — instead of one "
+                         "padded chunk forward where every decode stream "
+                         "pays C-1 masked query rows")
     ap.add_argument("--chunk-sweep", action="store_true",
                     help="sweep chunk sizes x {parallel, scan}: TTFT + "
                          "model steps per chunk tick + honest per-chunk "
@@ -208,31 +252,51 @@ def main():
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
     if args.chunk_sweep:
-        # chunk-size sweep at equal byte budget: every (C, path) cell must
-        # generate identical tokens; the fused path must hold 1 model step
-        # per chunk tick while the scan reference pays C
+        # chunk-size sweep at equal byte budget: every
+        # (C, path, kernel, split) cell must generate identical tokens; the
+        # fused path must hold 1 model step per chunk tick (scan pays C);
+        # the blocked kernel must price a strictly smaller score transient
+        # than dense once the (C, W+C) block outgrows one tile
+        cells = (("parallel", "blocked", True),
+                 ("parallel", "blocked", False),
+                 ("parallel", "dense", True),
+                 ("scan", "dense", True))
         base = None
         for C in (4, 8, 16, 24):
-            for pm in ("parallel", "scan"):
+            score = {}
+            for pm, kern, split in cells:
                 eng, res = run_mode(args, cfg, lazy=True,
                                     evict_mode=args.evict_mode,
-                                    prefill_mode=pm, prefill_chunk=C)
+                                    prefill_mode=pm, prefill_chunk=C,
+                                    chunk_kernel=kern, split_ticks=split)
                 st = ServeEngine.stats(eng.submitted)
                 kv = eng.kv_stats()
                 toks = [r.generated for r in
                         sorted(eng.submitted, key=lambda r: r.rid)]
                 if base is None:
                     base = toks
-                assert toks == base, f"chunk-sweep divergence at C={C} {pm}"
+                assert toks == base, \
+                    f"chunk-sweep divergence at C={C} {pm}/{kern}/{split}"
                 per_tick = (kv["prefill_model_steps"]
                             / max(1, kv["chunk_ticks"]))
                 assert per_tick == (1 if pm == "parallel" else eng._chunk)
-                emit([row(f"sweep_ttft_p50[{pm},C={eng._chunk}]",
+                if pm == "parallel" and split:
+                    score[kern] = kv["prefill_score_bytes"]
+                emit([row(f"sweep_ttft_p50[{pm},{kern},"
+                          f"{'split' if split else 'unsplit'},"
+                          f"C={eng._chunk}]",
                           st["ttft_p50"] * 1e6,
                           f"model_steps/chunk_tick={per_tick:.0f} "
                           f"chunk_bytes={kv['prefill_chunk_bytes']:.0f} "
                           f"(score={kv['prefill_score_bytes']:.0f}B)")])
-        print("chunk sweep token-identical across sizes and paths: True")
+            if C >= 16:
+                # at C=16 the dense (C, W+C) block exceeds one (32, 32)
+                # tile, so blocked must be strictly cheaper
+                assert score["blocked"] < score["dense"], \
+                    f"C={C}: blocked transient {score['blocked']:.0f}B " \
+                    f"not below dense {score['dense']:.0f}B"
+        print("chunk sweep token-identical across sizes, paths, kernels "
+              "and tick splitting: True")
         return
     # (label, lazy, evict_mode): the default run compares swap-evict lazy
     # against restart-evict lazy AND eager on the same schedule/budget
@@ -281,6 +345,56 @@ def main():
             "scan chunk tick did not pay C model steps"
         print(f"prefill model steps per chunk tick: parallel=1 scan={C} "
               f"(chunk={C}); token-identical: True")
+        # kernel gate: the other fused kernel on the same schedule must be
+        # token-identical, and blocked must price the smaller transient
+        other_k = "dense" if args.chunk_kernel == "blocked" else "blocked"
+        eng_k, res_k = run_mode(args, cfg, lazy=True,
+                                evict_mode=args.evict_mode,
+                                chunk_kernel=other_k)
+        toks_k = [r.generated for r in
+                  sorted(eng_k.submitted, key=lambda r: r.rid)]
+        assert toks["lazy"] == toks_k, \
+            f"{args.chunk_kernel}/{other_k} kernel token divergence"
+        score = {args.chunk_kernel: kp["prefill_score_bytes"],
+                 other_k: eng_k.kv_stats()["prefill_score_bytes"]}
+        if C >= 16:
+            assert score["blocked"] < score["dense"], \
+                f"blocked transient {score['blocked']:.0f}B not below " \
+                f"dense {score['dense']:.0f}B at C={C}"
+        print(f"chunk kernels token-identical: True (score transient: "
+              f"blocked={score['blocked']:.0f}B "
+              f"dense={score['dense']:.0f}B at C={C})")
+        # split gate: the other tick-splitting mode must be
+        # token-identical; the split run must leave decode streams with
+        # ZERO masked prefill-query rows and a tpot tail no worse than
+        # the padded mixed ticks (generous factor — interpret-mode CPU
+        # timings are noisy)
+        eng_u, res_u = run_mode(args, cfg, lazy=True,
+                                evict_mode=args.evict_mode,
+                                split_ticks=not args.split_ticks)
+        report("unsplit" if args.split_ticks else "split", args,
+               eng_u, res_u)
+        toks_u = [r.generated for r in
+                  sorted(eng_u.submitted, key=lambda r: r.rid)]
+        assert toks["lazy"] == toks_u, "split/unsplit token divergence"
+        e_split = runs["lazy"] if args.split_ticks else eng_u
+        e_pad = eng_u if args.split_ticks else runs["lazy"]
+        kv_s, kv_p = e_split.kv_stats(), e_pad.kv_stats()
+        assert kv_s["decode_masked_query_rows"] == 0, \
+            "split mode still paid masked decode-query rows"
+        if kv_p["decode_masked_query_rows"]:
+            assert kv_s["mixed_tick_decode_rows_saved"] > 0, \
+                "mixed ticks occurred but split saved no rows"
+        tp_s = ServeEngine.stats(e_split.submitted)["tpot_p50"]
+        tp_p = ServeEngine.stats(e_pad.submitted)["tpot_p50"]
+        assert tp_s <= tp_p * 1.5, \
+            f"split tpot_p50 {tp_s*1e6:.0f}us regressed vs " \
+            f"unsplit {tp_p*1e6:.0f}us"
+        print(f"tick splitting token-identical: True (decode rows saved="
+              f"{kv_s['mixed_tick_decode_rows_saved']:.0f}, unsplit "
+              f"masked rows={kv_p['decode_masked_query_rows']:.0f}, "
+              f"tpot_p50 split={tp_s*1e6:.0f}us "
+              f"unsplit={tp_p*1e6:.0f}us)")
     swap_mode = "lazy" if args.evict_mode == "swap" else "swap-evict"
     restart_mode = "restart-evict" if args.evict_mode == "swap" else "lazy"
     if swap_mode in runs and restart_mode in runs:

@@ -54,7 +54,8 @@ def main():
               f"groups, {r['moved_slots']} streams re-pointed, "
               f"{r['blocks_migrated']:.0f} KV blocks copied, "
               f"{r['requeued']} requests requeued")
-    print("kv pool:", {k: round(v, 3) for k, v in eng.kv_stats().items()
+    print("kv pool:", {k: round(v, 3) if isinstance(v, (int, float)) else v
+                       for k, v in eng.kv_stats().items()
                        if not isinstance(v, list)})
     print("counters:", {k: round(v, 1) for k, v in
                         eng.counters.snapshot().items()

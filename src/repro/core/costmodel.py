@@ -194,17 +194,27 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
 
 
 def prefill_chunk_score_bytes(cfg: ModelConfig, chunk_tokens: int,
-                              max_len: int = 0) -> float:
+                              max_len: int = 0, kernel: str = "dense",
+                              block_q: int = 32, block_kv: int = 32) -> float:
     """f32 attention-score transient ONE stream materializes in the
-    PARALLEL (fused) chunk forward: per query head, TWO live (C, W + C)
-    buffers — the joint score block over [W-slot prior ring, intra-chunk
-    causal] and its softmax probabilities (the per-source partial scores
-    fuse into the concatenation).  Layers run under ``lax.scan``, so only
-    the widest layer's buffers are live at once.  Enc-dec cross-attention
-    runs through BLOCKED (flash) attention, so it adds one
-    (C, block_kv) score block — never the full (C, S_src) matrix (the
-    S_src=4096 convention caps the block).  Zero for pure-state models
-    and for the scan path (whose per-token score rows are negligible)."""
+    PARALLEL (fused) chunk forward.
+
+    ``kernel="dense"`` (the einsum reference): per query head, TWO live
+    (C, W + C) buffers — the joint score block over [W-slot prior ring,
+    intra-chunk causal] and its softmax probabilities (the per-source
+    partial scores fuse into the concatenation).  ``kernel="blocked"``
+    (the Pallas online-softmax ring kernel): the same two buffers but
+    clipped to ONE (block_q, block_kv) tile — the live transient per grid
+    step, independent of W and C once both exceed the block sizes.
+
+    Layers run under ``lax.scan``, so only the widest layer's buffers are
+    live at once.  Enc-dec cross-attention runs through BLOCKED (flash)
+    attention either way, so it adds one (C, block_kv) score block — never
+    the full (C, S_src) matrix (the S_src=4096 convention caps the block).
+    Zero for pure-state models and for the scan path (whose per-token
+    score rows are negligible)."""
+    if kernel not in ("dense", "blocked"):
+        raise ValueError(f"unknown chunk kernel {kernel!r}")
     if max_len:
         chunk_tokens = min(chunk_tokens, max_len)
     C = float(chunk_tokens)
@@ -215,7 +225,11 @@ def prefill_chunk_score_bytes(cfg: ModelConfig, chunk_tokens: int,
             continue
         w = cfg.local_window if hybrid else cfg.window
         W = min(max_len, w) if (w and max_len) else (w or max_len)
-        b = 2.0 * cfg.n_heads * C * (W + C) * 4.0
+        if kernel == "blocked":
+            b = (2.0 * cfg.n_heads * min(block_q, C)
+                 * min(block_kv, W + C) * 4.0)
+        else:
+            b = 2.0 * cfg.n_heads * C * (W + C) * 4.0
         if cfg.family == "encdec":
             b += cfg.n_heads * C * min(cfg.attn_block_kv, 4096) * 4.0
         per_layer.append(b)
@@ -223,21 +237,23 @@ def prefill_chunk_score_bytes(cfg: ModelConfig, chunk_tokens: int,
 
 
 def prefill_chunk_bytes(cfg: ModelConfig, chunk_tokens: int,
-                        max_len: int = 0, mode: str = "scan") -> float:
+                        max_len: int = 0, mode: str = "scan",
+                        kernel: str = "dense") -> float:
     """Byte-accurate transient footprint of ONE chunked-prefill step: the
     ring KV written for ``chunk_tokens`` new tokens plus the per-stream
     state carried between chunks.  This bounds the outside-the-pool prefill
     buffer regardless of prompt length — the number to compare against the
     ``kv_cache_bytes(prompt)`` single-stream cache that whole-prompt
     prefill materializes before scattering.  ``mode="parallel"`` adds the
-    fused path's (C, W + C) attention-score transient
-    (``prefill_chunk_score_bytes``), so chunk-size sweeps compare honest
-    footprints across the two compiled paths."""
+    fused path's attention-score transient
+    (``prefill_chunk_score_bytes``) for the given ``kernel``, so chunk-size
+    sweeps compare honest footprints across compiled paths AND kernels."""
     if max_len:
         chunk_tokens = min(chunk_tokens, max_len)
     base = chunk_tokens * kv_token_bytes(cfg) + kv_state_bytes(cfg)
     if mode == "parallel":
-        base += prefill_chunk_score_bytes(cfg, chunk_tokens, max_len)
+        base += prefill_chunk_score_bytes(cfg, chunk_tokens, max_len,
+                                          kernel=kernel)
     return base
 
 

@@ -49,6 +49,11 @@ class StepSample:
     kv_spilled_pages: float = 0.0
     kv_restores: float = 0.0
     recompute_tokens: float = 0.0
+    # Split mixed ticks: masked prefill-query rows decode streams did NOT
+    # execute because the tick ran as a compacted chunk step + a single-
+    # token step ((C-1) x decode streams per split tick) — delta since the
+    # previous sample.
+    mixed_tick_decode_rows_saved: float = 0.0
 
 
 class PerfCounters:
@@ -81,7 +86,8 @@ class PerfCounters:
                     prefill_chunks: float = 0.0,
                     kv_spilled_pages: float = 0.0,
                     kv_restores: float = 0.0,
-                    recompute_tokens: float = 0.0):
+                    recompute_tokens: float = 0.0,
+                    mixed_tick_decode_rows_saved: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -93,7 +99,8 @@ class PerfCounters:
                                        kv_blocks_migrated, kv_lazy_grows,
                                        kv_mid_decode_parks, prefill_chunks,
                                        kv_spilled_pages, kv_restores,
-                                       recompute_tokens))
+                                       recompute_tokens,
+                                       mixed_tick_decode_rows_saved))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

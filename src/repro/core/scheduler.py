@@ -109,7 +109,9 @@ class GlobalScheduler:
                 prefill_chunks=step_metrics.get("prefill_chunks", 0.0),
                 kv_spilled_pages=step_metrics.get("kv_spilled_pages", 0.0),
                 kv_restores=step_metrics.get("kv_restores", 0.0),
-                recompute_tokens=step_metrics.get("recompute_tokens", 0.0))
+                recompute_tokens=step_metrics.get("recompute_tokens", 0.0),
+                mixed_tick_decode_rows_saved=step_metrics.get(
+                    "mixed_tick_decode_rows_saved", 0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()

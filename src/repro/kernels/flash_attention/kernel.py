@@ -147,6 +147,131 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
 
 
 # ---------------------------------------------------------------------------
+# Ring-chunk forward (serving fused-prefill path; no VJP)
+# ---------------------------------------------------------------------------
+
+def _ring_block_visible(iq, jk, bq, bkv, ring):
+    """Static skip for the ring-chunk grid: only the chunk segment of the
+    concatenated KV axis (indices >= ring) is statically causal — a block
+    whose lowest chunk offset exceeds the q block's highest offset can never
+    contain a visible entry.  Ring-slot blocks are data-dependent (per-stream
+    positions) and are always entered; their masking is per-element."""
+    q_hi = iq * bq + bq - 1
+    kv_lo = jk * bkv
+    return (kv_lo < ring) | (kv_lo - ring <= q_hi)
+
+
+def _ring_fwd_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                     m_scr, l_scr, acc_scr, *, scale, ring, window, softcap,
+                     bq, bkv, n_kv):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(_ring_block_visible(iq, jk, bq, bkv, ring))
+    def _compute():
+        q = q_ref[0]                                   # (bq, dh)
+        k = k_ref[0]                                   # (bkv, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        # absolute positions carried in by the wrapper: q rows are pos+t,
+        # KV entries are the slot's held position (ring segment, negative =
+        # never written), pos+t' for live chunk keys, or a sentinel far
+        # below zero for idle/short-chunk keys and block padding.  One band
+        # test then expresses all three dense masks: causality (kp <= qp),
+        # ring eviction incl. intra-chunk self-eviction for C > W
+        # (kp > qp - ring), and never-written slots (kp >= 0).
+        qp = qpos_ref[0][:, None].astype(jnp.int32)    # (bq, 1)
+        kp = kpos_ref[0][None, :].astype(jnp.int32)    # (1, bkv)
+        mask = (kp >= 0) & (kp <= qp) & (kp > qp - ring)
+        if window:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]                           # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[:, 0] * alpha + p.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None] +
+                        jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(jk == n_kv - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        denom = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def ring_chunk_attention_fwd(q, k, v, q_pos, kv_pos, *, ring, window=0,
+                             softcap=0.0, block_q=32, block_kv=32,
+                             hq_per_kv=1, interpret=False):
+    """Forward-only blocked attention over [prior ring, chunk keys].
+
+    q: (BHq, Cp, dh) chunk queries, head-major, padded to a block_q
+    multiple; k/v: (BHkv, Lp, dh) the concatenated [ring, chunk] KV, padded
+    to a block_kv multiple; q_pos: (B, Cp) int32 absolute query positions;
+    kv_pos: (B, Lp) int32 absolute KV positions with negative sentinels for
+    never-written slots, masked chunk keys, and padding.  ``ring`` is the
+    ring width W (the implicit eviction window).  Returns (BHq, Cp, dh).
+
+    The live transient per grid step is one (block_q, block_kv) f32 score
+    block plus the online-softmax state — never the dense (C, W+C) block.
+    """
+    BH, Cp, dh = q.shape
+    Lp = k.shape[1]
+    B = q_pos.shape[0]
+    heads = BH // B
+    bq = min(block_q, Cp)
+    bkv = min(block_kv, Lp)
+    assert Cp % bq == 0 and Lp % bkv == 0
+    n_q, n_kv = Cp // bq, Lp // bkv
+    scale = dh ** -0.5
+    G = hq_per_kv
+
+    kernel = functools.partial(
+        _ring_fwd_kernel, scale=scale, ring=ring, window=window,
+        softcap=softcap, bq=bq, bkv=bkv, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, iq, jk: (b, iq, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, iq, jk: (b // G, jk, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, iq, jk: (b // G, jk, 0)),
+            pl.BlockSpec((1, bq), lambda b, iq, jk: (b // heads, iq)),
+            pl.BlockSpec((1, bkv), lambda b, iq, jk: (b // heads, jk)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, iq, jk: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Cp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Backward: dq kernel (grid over q blocks, scan kv) and dkv kernel
 # ---------------------------------------------------------------------------
 

@@ -300,7 +300,7 @@ def make_serve_step(cfg: ModelConfig, gather_specs=None):
 
 
 def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None,
-                          mode: str = "scan"):
+                          mode: str = "scan", chunk_kernel: str = "dense"):
     """(params, cache, tokens (B,C), pos, n_tokens[, extras]) ->
     (last-active-token logits, cache').  The continuous-batching mixed
     step: prefill chunks and decode streams share one batched call with
@@ -310,15 +310,20 @@ def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None,
     ``chunk_decode_step`` masks a per-token scan of ``decode_step``, bit-
     identical to single-token stepping, C sequential model steps per
     chunk) or "parallel" (``prefill_chunk_step`` — one fused multi-token
-    forward per tick, matching the scan to tolerance)."""
+    forward per tick, matching the scan to tolerance).  ``chunk_kernel``
+    picks the parallel path's attention: "dense" (einsum reference) or
+    "blocked" (Pallas online-softmax tiles); the scan path ignores it."""
     if mode not in ("scan", "parallel"):
         raise ValueError(f"unknown chunk-step mode {mode!r}")
+    if chunk_kernel not in ("dense", "blocked"):
+        raise ValueError(f"unknown chunk kernel {chunk_kernel!r}")
 
     def serve_chunk_step(params, cache, tokens, pos, n_tokens, extras=None):
         if mode == "parallel":
             return dec.prefill_chunk_step(params, cfg, spec, cache, tokens,
                                           pos, n_tokens, extras,
-                                          gather_specs=gather_specs)
+                                          gather_specs=gather_specs,
+                                          chunk_kernel=chunk_kernel)
         return dec.chunk_decode_step(params, cfg, spec, cache, tokens, pos,
                                      n_tokens, extras)
 

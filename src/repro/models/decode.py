@@ -514,11 +514,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, extras=None,
 # idle slot a chunk of 0 (no cache leaf moves, logits poisoned to NEG_INF).
 
 def _chunk_attn_layer(x, lp, lc, cfg: ModelConfig, rope1, pos, n_tokens, *,
-                      window):
+                      window, chunk_kernel="dense"):
     xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     q, k, v = _attn_proj(xin, lp["attn"], rope1, cfg=cfg)
     o = L.chunk_attention(q, k, v, lc["k"], lc["v"], pos, n_tokens,
-                          window=window)
+                          window=window, kernel=chunk_kernel)
     kc, vc = L.cache_update_chunk(lc["k"], lc["v"], k, v, pos, n_tokens)
     h = x + _attn_out(o, lp["attn"], x.dtype)
     f, _ = _ffn(L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp, cfg,
@@ -527,11 +527,11 @@ def _chunk_attn_layer(x, lp, lc, cfg: ModelConfig, rope1, pos, n_tokens, *,
 
 
 def _chunk_layer(x, lp, lc, cfg: ModelConfig, lt: str, rope1, pos, n_tokens,
-                 *, hybrid=False):
+                 *, hybrid=False, chunk_kernel="dense"):
     if lt == "attn":
         w = cfg.local_window if hybrid else cfg.window
         return _chunk_attn_layer(x, lp, lc, cfg, rope1, pos, n_tokens,
-                                 window=w)
+                                 window=w, chunk_kernel=chunk_kernel)
     if lt == "rec":
         r, st = rglru_mod.rglru_chunk_step(
             L.rms_norm(x, lp["ln1"], cfg.norm_eps), lp["rec"], cfg, lc,
@@ -549,7 +549,8 @@ def _chunk_layer(x, lp, lc, cfg: ModelConfig, lt: str, rope1, pos, n_tokens,
 
 
 def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
-                       tokens, pos, n_tokens, extras=None, gather_specs=None):
+                       tokens, pos, n_tokens, extras=None, gather_specs=None,
+                       chunk_kernel="dense"):
     """One continuous-batching tick as ONE fused multi-token forward.
 
     Same contract as ``chunk_decode_step`` (tokens (B, C), pos (B,),
@@ -562,14 +563,18 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
     score transient (``costmodel.prefill_chunk_score_bytes``) and numerics
     that match the scan path to tolerance rather than bit-exactly — the
     scan stays available as the reference (``prefill_mode="scan"``).
+    ``chunk_kernel="blocked"`` swaps the dense score block for the Pallas
+    online-softmax ring kernel, shrinking the attention transient to one
+    (block_q, block_kv) tile; "dense" keeps the einsum reference.
 
     Masking invariants: active tokens are a per-stream PREFIX of the
     chunk; an inactive token updates no cache leaf (ring writes are
     masked, recurrent/SSD steps degrade to identity), and an idle slot
     (n_tokens == 0) passes its cache through bit-unchanged and gets a
     NEG_INF-poisoned logits row — ``next_token_ids`` maps it to -1, so an
-    idle slot can never emit a token.  Requires C <= ring width (the
-    engine clamps its chunk; a wider chunk would self-overwrite).
+    idle slot can never emit a token.  Chunks wider than the ring are
+    supported: attention masks each query to its surviving span and the
+    ring write keeps the last W active tokens (last-write-wins).
     """
     from repro.models.transformer import _wsc_tree
     extras = extras or {}
@@ -594,7 +599,8 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
             xin = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = _attn_proj(xin, lp["attn"], rope1, cfg=cfg)
             o = L.chunk_attention(q, k, v, lc["self_c"]["k"],
-                                  lc["self_c"]["v"], pos, n_tokens)
+                                  lc["self_c"]["v"], pos, n_tokens,
+                                  kernel=chunk_kernel)
             kc, vc = L.cache_update_chunk(lc["self_c"]["k"],
                                           lc["self_c"]["v"], k, v, pos,
                                           n_tokens)
@@ -627,7 +633,8 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
             for i, t in enumerate(pattern):
                 nm = f"b{i}_{t}"
                 x, st = _chunk_layer(x, gp[nm], gc[nm], cfg, t, rope1, pos,
-                                     n_tokens, hybrid=True)
+                                     n_tokens, hybrid=True,
+                                     chunk_kernel=chunk_kernel)
                 new_gc[nm] = st
             return x, new_gc
 
@@ -636,7 +643,8 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
         for nm, lp in params["tail"].items():
             t = nm.split("_", 1)[1]
             x, st = _chunk_layer(x, lp, cache["tail"][nm], cfg, t, rope1, pos,
-                                 n_tokens, hybrid=True)
+                                 n_tokens, hybrid=True,
+                                 chunk_kernel=chunk_kernel)
             new_tail[nm] = st
         new_cache = {"groups": new_groups, "tail": new_tail}
     else:
@@ -645,7 +653,8 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
         def body(x, inp):
             lp, lc = inp
             lp = _wsc_tree(lp, gather_specs and gather_specs.get("layers"))
-            x, st = _chunk_layer(x, lp, lc, cfg, lt, rope1, pos, n_tokens)
+            x, st = _chunk_layer(x, lp, lc, cfg, lt, rope1, pos, n_tokens,
+                                 chunk_kernel=chunk_kernel)
             return x, st
 
         x, new_layers = lax.scan(body, x, (params["layers"], cache["layers"]))

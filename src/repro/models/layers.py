@@ -358,7 +358,8 @@ def decode_attention(q, k_cache, v_cache, kv_positions, q_pos, *,
 
 
 def chunk_attention(q, k_new, v_new, k_cache, v_cache, pos, n_tokens, *,
-                    window=0, softcap=0.0):
+                    window=0, softcap=0.0, kernel="dense", block_q=32,
+                    block_kv=32, interpret=None):
     """Multi-token chunk attention over a ring cache: ONE fused score
     computation instead of C sequential decode steps.
 
@@ -375,9 +376,24 @@ def chunk_attention(q, k_new, v_new, k_cache, v_cache, pos, n_tokens, *,
     short chunks, out-of-window) go to NEG_INF; a fully-masked row (idle
     stream) degrades to a uniform softmax whose output is discarded.
 
-    The (B, H, C, W+C) score block is the transient this buys speed with —
-    priced by ``costmodel.prefill_chunk_score_bytes``.
+    ``kernel`` selects the score computation: "dense" materializes the
+    (B, H, C, W+C) block below (the reference, priced by
+    ``costmodel.prefill_chunk_score_bytes``); "blocked" streams KV in
+    (block_q, block_kv) tiles through the Pallas online-softmax kernel
+    (``kernels.flash_attention.ops.ring_chunk_attention``) so the live
+    transient never exceeds one tile.  Both are exact for chunks wider
+    than the ring (C > W): intra-chunk self-eviction is the same band
+    test ``kv > q - W`` that evicts prior-ring entries.
     """
+    if kernel == "blocked":
+        from repro.kernels.flash_attention.ops import ring_chunk_attention
+        return ring_chunk_attention(
+            q, k_new, v_new, k_cache, v_cache, pos, n_tokens,
+            window=window, softcap=softcap, block_q=block_q,
+            block_kv=block_kv, interpret=interpret)
+    if kernel != "dense":
+        raise ValueError(f"unknown chunk kernel {kernel!r}: "
+                         "expected 'dense' or 'blocked'")
     B, C, Hq, dh = q.shape
     W, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
@@ -404,6 +420,10 @@ def chunk_attention(q, k_new, v_new, k_cache, v_cache, pos, n_tokens, *,
         & (kv_pos[:, None, :] > q_pos[:, :, None] - W)
     vc = (t[None, :] <= t[:, None])[None] \
         & (t[None, None, :] < n_tokens[:, None, None])
+    # intra-chunk self-eviction: with C > W, chunk token t' <= t - W has
+    # been overwritten (by t'+W <= t) before query t runs sequentially —
+    # vacuously true when C <= W, the same band as the ring mask above
+    vc &= (t[None, :] > t[:, None] - W)[None]
     if window:
         vp &= kv_pos[:, None, :] > q_pos[:, :, None] - window
         vc &= (t[None, :] > t[:, None] - window)[None]
@@ -442,26 +462,31 @@ def cache_update_chunk(k_cache, v_cache, k_new, v_new, pos, n_tokens):
 
     caches: (B, W, Hkv, dh); k_new/v_new: (B, C, Hkv, dh); pos: (B,)
     position of chunk token 0; n_tokens: (B,) in [0, C] — tokens past a
-    stream's count write their slot's OLD value back (bit-exact no-op), so
-    idle and short-chunk streams leave the ring untouched.  Requires
-    C <= W: the C consecutive positions then map to distinct slots (a
-    chunk wider than the ring would overwrite itself mid-write, which only
-    the sequential scan path can express).
+    stream's count leave their slot untouched, so idle and short-chunk
+    streams leave the ring as-is.  Works for ANY chunk width, including
+    C > W: sequential stepping writes tokens in order, so when several
+    chunk tokens map to one slot the LAST active one (largest t < n with
+    t % W == (slot - pos) % W) survives — expressed here as a per-slot
+    gather instead of a scatter, which would need ordered duplicate-index
+    semantics XLA does not guarantee.
     """
     B, C = k_new.shape[:2]
     W = k_cache.shape[1]
-    if C > W:
-        raise ValueError(f"chunk of {C} tokens exceeds ring width {W}: "
-                         "use the scan path or clamp the chunk")
-    slots = (pos[:, None] + jnp.arange(C)[None, :]) % W     # (B, C)
-    active = jnp.arange(C)[None, :] < n_tokens[:, None]     # (B, C)
+    s_idx = jnp.arange(W)[None, :]                          # (1, W)
+    t0 = (s_idx - pos[:, None]) % W                         # (B, W)
+    # largest active chunk token landing on each slot (last write wins);
+    # candidates are t0, t0+W, t0+2W, ... — none active iff t0 >= n
+    kmax = (n_tokens[:, None] - 1 - t0) // W
+    t_star = t0 + W * kmax                                  # (B, W)
+    written = t0 < n_tokens[:, None]
+    src = jnp.clip(t_star, 0, C - 1)
 
-    def upd(c, new, sl, act):
-        cur = jnp.take(c, sl, axis=0)                       # (C, Hkv, dh)
-        return c.at[sl].set(jnp.where(act[:, None, None], new, cur))
+    def upd(c, new, sl, wr):
+        g = jnp.take(new, sl, axis=0)                       # (W, Hkv, dh)
+        return jnp.where(wr[:, None, None], g, c)
 
-    k_cache = jax.vmap(upd)(k_cache, k_new, slots, active)
-    v_cache = jax.vmap(upd)(v_cache, v_new, slots, active)
+    k_cache = jax.vmap(upd)(k_cache, k_new, src, written)
+    v_cache = jax.vmap(upd)(v_cache, v_new, src, written)
     return k_cache, v_cache
 
 

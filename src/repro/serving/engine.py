@@ -152,6 +152,18 @@ class EngineConfig:
                                        # sequential model steps per chunk,
                                        # bit-identical to single-token
                                        # stepping)
+    chunk_kernel: str = "blocked"      # fused-path attention: "blocked"
+                                       # streams KV in (block_q, block_kv)
+                                       # tiles through the Pallas online-
+                                       # softmax ring kernel; "dense" keeps
+                                       # the (C, W+C) einsum reference
+    split_ticks: bool = True           # mixed ticks run TWO compiled steps
+                                       # (a compacted fused chunk forward
+                                       # for prefill streams + the single-
+                                       # token step for decode streams) so
+                                       # decode streams stop paying C-1
+                                       # masked query rows; False keeps the
+                                       # PR-5 one-step mixed tick
     pool_streams: Optional[int] = None  # per-DOMAIN budget, expressed as
                                         # full-length streams (monolith
                                         # equivalence); default max_batch
@@ -270,7 +282,11 @@ class ServeEngine:
             raise ValueError(f"unknown evict_mode {ecfg.evict_mode!r}")
         if ecfg.prefill_mode not in ("parallel", "scan"):
             raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
+        if ecfg.chunk_kernel not in ("blocked", "dense"):
+            raise ValueError(f"unknown chunk_kernel {ecfg.chunk_kernel!r}")
         self._prefill_mode = ecfg.prefill_mode if self._lazy else "scan"
+        self._chunk_kernel = (ecfg.chunk_kernel
+                              if self._prefill_mode == "parallel" else "dense")
         self._parked: Dict[int, _Parked] = {}
         self._park_seq = itertools.count()
         self._progress_mark = -1.0
@@ -300,11 +316,9 @@ class ServeEngine:
             self._chunk = ecfg.prefill_chunk or (
                 self.pool.block_tokens if self.pool.pages_per_stream
                 else ecfg.block_tokens)
-            if self._prefill_mode == "parallel" and self.pool.spec.width:
-                # the fused forward writes C distinct ring slots in one
-                # scatter: a chunk wider than the ring would overwrite
-                # itself mid-chunk (only the scan path can express that)
-                self._chunk = min(self._chunk, self.pool.spec.width)
+            # no C <= W clamp: the fused forward handles chunks wider than
+            # the ring (attention masks each query to its surviving span,
+            # the cache write keeps the last W active tokens)
             if self._lazy:
                 self._paged_chunk = jax.jit(
                     self._make_paged_chunk(self._prefill_mode),
@@ -553,7 +567,8 @@ class ServeEngine:
         ``mode="parallel"`` compiles the fused multi-token forward (one
         model pass per tick); "scan" the per-token reference."""
         spec = self.pool.spec
-        step = make_serve_chunk_step(self.cfg, spec, mode=mode)
+        step = make_serve_chunk_step(self.cfg, spec, mode=mode,
+                                     chunk_kernel=self._chunk_kernel)
 
         def paged_chunk(params, storage, tables, state_slots, tokens, pos,
                         n_tokens):
@@ -855,6 +870,69 @@ class ServeEngine:
             g.pos_h[slot] = len(req.prompt)
             g.tok_h[slot] = nxt
 
+    def _split_tick(self, g: _Group, n_h, toks, C: int,
+                    deco_rows: List[int]) -> np.ndarray:
+        """A mixed tick as TWO compiled steps instead of one C-wide step.
+
+        The fused chunk forward runs over a COMPACTED batch holding only
+        the multi-token prefill streams (padded to a power-of-two bucket so
+        the number of distinct compiled shapes stays O(log max_batch)); the
+        single-token streams reuse the existing full-batch decode step with
+        every non-decode row pointed at the null table/state slot (reserved
+        id 0 — written but never read, the same convention empty slots use).
+        The two steps touch disjoint real pages, so running them back to
+        back over the donated storage is exact.  Decode streams thus pay 1
+        query row instead of C — the (C-1)·n_decode rows saved land in the
+        ``mixed_tick_decode_rows_saved`` counter.
+        """
+        B = self.ecfg.max_batch
+        P = self.pool.pages_per_stream
+        chunk_rows = [i for i in range(B) if n_h[i] > 1]
+        # -- chunk half: compacted fused forward over prefill streams only
+        Bc = 1
+        while Bc < len(chunk_rows):
+            Bc *= 2
+        Bc = min(Bc, B)
+        rows = chunk_rows + [None] * (Bc - len(chunk_rows))
+        trows, srows = zip(*(self._table_row(g.slots[i])
+                             if i is not None else self._table_row(None)
+                             for i in rows))
+        toks_c = np.zeros((Bc, C), np.int32)
+        pos_c = np.zeros((Bc,), np.int32)
+        n_c = np.zeros((Bc,), np.int32)
+        for j, i in enumerate(chunk_rows):
+            toks_c[j] = toks[i]
+            pos_c[j] = g.pos_h[i]
+            n_c[j] = n_h[i]
+        logits_c, self.pool.storage = self._paged_chunk(
+            self.params, self.pool.storage,
+            jnp.asarray(np.asarray(trows, np.int32).reshape(Bc, P)),
+            jnp.asarray(np.asarray(srows, np.int32)),
+            jnp.asarray(toks_c), jnp.asarray(pos_c), jnp.asarray(n_c))
+        nxt_c = np.asarray(dec.next_token_ids(logits_c, jnp.asarray(n_c)))
+        # -- decode half: the plain single-token step at full batch width
+        deco = set(deco_rows)
+        trows, srows = zip(*(self._table_row(g.slots[i])
+                             if i in deco else self._table_row(None)
+                             for i in range(B)))
+        toks_d = np.zeros((B, 1), np.int32)
+        n_d = np.zeros((B,), np.int32)
+        for i in deco_rows:
+            toks_d[i, 0] = toks[i, 0]
+            n_d[i] = 1
+        logits_d, self.pool.storage = self._paged_decode(
+            self.params, self.pool.storage,
+            jnp.asarray(np.asarray(trows, np.int32).reshape(B, P)),
+            jnp.asarray(np.asarray(srows, np.int32)),
+            jnp.asarray(toks_d), jnp.asarray(g.pos_h))
+        nxt = np.array(dec.next_token_ids(logits_d, jnp.asarray(n_d)))
+        for j, i in enumerate(chunk_rows):
+            nxt[i] = nxt_c[j]
+        self.counters.add("split_ticks", 1)
+        self.counters.add("mixed_tick_decode_rows_saved",
+                          (C - 1) * len(deco_rows))
+        return nxt
+
     def _decode_tick(self, g: _Group):
         """ONE batched model step for the group: every occupied slot
         consumes its next tokens — a page-sized prompt chunk for streams
@@ -899,10 +977,8 @@ class ServeEngine:
                 toks[i, :n_h[i]] = req.prompt[pos:pos + n_h[i]]
             else:
                 toks[i, 0] = g.tok_h[i]
+        deco_rows = [i for i in range(B) if n_h[i] == 1]
         if chunked:
-            logits, self.pool.storage = self._paged_chunk(
-                self.params, self.pool.storage, tables, slots1,
-                jnp.asarray(toks), pos_j, jnp.asarray(n_h))
             # model-step accounting, STRUCTURAL (by construction of the
             # compiled path, not measured at runtime): the fused path is
             # one forward per tick, the scan path a length-C lax.scan of
@@ -912,6 +988,19 @@ class ServeEngine:
             self.counters.add(
                 "prefill_model_steps",
                 1 if self._prefill_mode == "parallel" else C)
+            if self.ecfg.split_ticks and deco_rows:
+                nxt = self._split_tick(g, n_h, toks, C, deco_rows)
+            else:
+                if deco_rows:
+                    # single-token streams ride the C-wide step: C-1 of
+                    # their query rows are pure masked-FLOP waste
+                    self.counters.add("decode_masked_query_rows",
+                                      (C - 1) * len(deco_rows))
+                logits, self.pool.storage = self._paged_chunk(
+                    self.params, self.pool.storage, tables, slots1,
+                    jnp.asarray(toks), pos_j, jnp.asarray(n_h))
+                nxt = np.asarray(dec.next_token_ids(logits,
+                                                    jnp.asarray(n_h)))
         else:
             tokens = jnp.asarray(toks)
             if self.ecfg.paged:
@@ -921,9 +1010,9 @@ class ServeEngine:
             else:
                 logits, g.cache = self._decode(self.params, g.cache, tokens,
                                                pos_j)
-        # idle-slot hardening: slots with n == 0 get the -1 sentinel, never
-        # an argmax over a constant (all-zero / all-NEG_INF) logits row
-        nxt = np.asarray(dec.next_token_ids(logits, jnp.asarray(n_h)))
+            # idle-slot hardening: slots with n == 0 get the -1 sentinel,
+            # never an argmax over a constant (all-zero / all-NEG_INF) row
+            nxt = np.asarray(dec.next_token_ids(logits, jnp.asarray(n_h)))
         g.steps += 1
         now = self._clock()
         for i in range(B):
@@ -983,7 +1072,8 @@ class ServeEngine:
             return None
         names = ("kv_alloc_failures", "kv_blocks_migrated", "kv_lazy_grows",
                  "kv_mid_decode_parks", "prefill_chunks",
-                 "kv_spilled_pages", "kv_restores", "recompute_tokens")
+                 "kv_spilled_pages", "kv_restores", "recompute_tokens",
+                 "mixed_tick_decode_rows_saved")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -1034,11 +1124,17 @@ class ServeEngine:
         # the compiled path (parallel adds the fused score transient)
         s["prefill_chunk_bytes"] = prefill_chunk_bytes(
             self.cfg, self._chunk, self.ecfg.max_len,
-            mode=self._prefill_mode)
+            mode=self._prefill_mode, kernel=self._chunk_kernel)
         s["prefill_score_bytes"] = (
             prefill_chunk_score_bytes(self.cfg, self._chunk,
-                                      self.ecfg.max_len)
+                                      self.ecfg.max_len,
+                                      kernel=self._chunk_kernel)
             if self._prefill_mode == "parallel" else 0.0)
+        s["chunk_kernel"] = self._chunk_kernel
+        s["mixed_tick_decode_rows_saved"] = self.counters.totals.get(
+            "mixed_tick_decode_rows_saved", 0.0)
+        s["decode_masked_query_rows"] = self.counters.totals.get(
+            "decode_masked_query_rows", 0.0)
         s["prefill_model_steps"] = self.counters.totals.get(
             "prefill_model_steps", 0.0)
         s["chunk_ticks"] = self.counters.totals.get("chunk_ticks", 0.0)

@@ -248,22 +248,28 @@ FAMILY_ARCHS = ("llama3-8b", "mixtral-8x22b", "mamba2-780m",
                 "recurrentgemma-9b", "seamless-m4t-large-v2")
 
 
-@settings(max_examples=5, deadline=None)
-@given(seed=st.integers(0, 10**6), arch=st.sampled_from(FAMILY_ARCHS))
-def test_parallel_scan_chunk_identity_property(seed, arch):
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6), arch=st.sampled_from(FAMILY_ARCHS),
+       kernel=st.sampled_from(("dense", "blocked")),
+       wide=st.booleans())
+def test_parallel_scan_chunk_identity_property(seed, arch, kernel, wide):
     """The fused multi-token forward (``prefill_chunk_step``) matches the
     per-token scan reference (``chunk_decode_step``) within tolerance on
     logits AND every cache leaf, for random chunks over a randomly warmed
     ring — across dense / MoE / SSM / hybrid / enc-dec families, with
     mixed per-stream lengths including a decode stream (n=1) and an idle
-    slot (n=0), and with positions deep enough to wrap the ring."""
+    slot (n=0), and with positions deep enough to wrap the ring.  Both
+    chunk kernels (dense einsum and the blocked Pallas ring kernel) must
+    pass, including chunks WIDER than the ring (``wide`` shrinks the ring
+    below the chunk: the C≤W clamp is lifted)."""
     import jax
     import jax.numpy as jnp
     from repro.models import decode as dec
     from repro.models.params import init_params
     cfg = reduced_config(REGISTRY[arch])
     rng = np.random.default_rng(seed)
-    B, C, max_len = 3, 6, 16
+    B, C = 3, 6
+    max_len = 4 if wide else 16          # wide: ring W=4 < C=6
     src = 6 if cfg.family == "encdec" else 0
     params = init_params(cfg, jax.random.PRNGKey(seed % 7))
     spec = dec.cache_view_specs(cfg, max_len, src)
@@ -289,7 +295,7 @@ def test_parallel_scan_chunk_identity_property(seed, arch):
     lg_s, c_s = dec.chunk_decode_step(params, cfg, spec, cache, toks, pos,
                                       nt)
     lg_p, c_p = dec.prefill_chunk_step(params, cfg, spec, cache, toks, pos,
-                                       nt)
+                                       nt, chunk_kernel=kernel)
     act = np.asarray(nt) > 0
     np.testing.assert_allclose(np.asarray(lg_p)[act], np.asarray(lg_s)[act],
                                rtol=2e-2, atol=2e-3)
@@ -356,6 +362,68 @@ def test_parallel_chunk_spanning_pages_token_identity():
             toks = [r.generated for r in reqs]
             base = base or toks
             assert toks == base, (chunk, pm)
+
+
+def test_chunk_kernel_and_split_ticks_token_identity():
+    """Every cell of the kernel x split matrix generates the scan
+    reference's exact tokens, and the split cells actually split: decode
+    streams execute ZERO masked prefill-query rows (counter-verified)
+    while unsplit mixed ticks pay (C-1) rows per decode stream."""
+    rng = np.random.default_rng(13)
+    # long prompts prefill while earlier streams decode -> mixed ticks
+    prompts = [rng.integers(2, CFG.vocab, size=s) for s in (4, 30, 28, 5)]
+    max_new = [14, 4, 4, 10]
+    base = None
+    for kern in ("blocked", "dense"):
+        for split in (True, False):
+            eng, reqs, res = _run(prompts, max_new, lazy=True, groups=1,
+                                  max_batch=4, pool_streams=4,
+                                  chunk_kernel=kern, split_ticks=split)
+            toks = [r.generated for r in reqs]
+            base = base or toks
+            assert toks == base, (kern, split)
+            c = res["counters"]
+            if split:
+                assert c.get("split_ticks", 0) >= 1, (kern, split)
+                assert c.get("mixed_tick_decode_rows_saved", 0) > 0
+                assert c.get("decode_masked_query_rows", 0) == 0
+            else:
+                assert c.get("split_ticks", 0) == 0
+                assert c.get("decode_masked_query_rows", 0) > 0
+            kv = eng.kv_stats()
+            assert kv["chunk_kernel"] == kern
+    _, reqs_s, _ = _run(prompts, max_new, lazy=True, groups=1, max_batch=4,
+                        pool_streams=4, prefill_mode="scan")
+    assert [r.generated for r in reqs_s] == base
+    # scan mode prices no fused transient regardless of requested kernel
+    eng, _, _ = _run(prompts[:1], max_new[:1], lazy=True, groups=1,
+                     prefill_mode="scan", chunk_kernel="blocked")
+    assert eng.kv_stats()["chunk_kernel"] == "dense"
+
+
+def test_chunk_wider_than_ring_engine_token_identity():
+    """The C<=W clamp is LIFTED: a hybrid model (ring W=32 < max_len=48)
+    runs 40-token prefill chunks — wider than its ring — through both
+    fused kernels and stays token-identical to the scan path (which steps
+    token-by-token and never saw a clamp)."""
+    hyb = reduced_config(REGISTRY["recurrentgemma-9b"])
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(2, hyb.vocab, size=44) for _ in range(2)]
+    topo = ChipletTopology(n_pods=1, groups_per_pod=1, chips_per_group=1)
+    outs = {}
+    for key, (pm, kern) in {"blocked": ("parallel", "blocked"),
+                            "dense": ("parallel", "dense"),
+                            "scan": ("scan", "dense")}.items():
+        ecfg = EngineConfig(max_batch=2, max_len=48, pool_streams=2,
+                            prefill_chunk=40, prefill_mode=pm,
+                            chunk_kernel=kern, adaptive=False)
+        eng = ServeEngine(hyb, topo, ecfg, spread_rate=1, seed=0)
+        assert eng._chunk == 40 > eng.pool.spec.width == 32
+        reqs = [eng.submit(p, max_new=3) for p in prompts]
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        outs[key] = [r.generated for r in reqs]
+    assert outs["blocked"] == outs["dense"] == outs["scan"]
 
 
 def test_idle_slot_logits_are_poisoned_not_argmaxable():
@@ -462,6 +530,53 @@ def test_prefill_chunk_score_bytes_costmodel():
                           + prefill_chunk_score_bytes(cfg, 8, ml))
     assert prefill_chunk_score_bytes(CFG, 64, max_len=16) == \
         pytest.approx(prefill_chunk_score_bytes(CFG, 16, max_len=16))
+
+
+def test_prefill_chunk_score_bytes_blocked_kernel():
+    """The blocked (Pallas online-softmax) kernel's transient is ONE
+    (block_q, block_kv) tile pair, hand-computed for dense and hybrid
+    configs, and — the acceptance bound — NEVER exceeds
+    2*n_heads*block_q*block_kv*4 no matter how wide the ring or the chunk
+    grows (the dense transient scales as C*(W+C))."""
+    from repro.core.costmodel import (prefill_chunk_bytes,
+                                      prefill_chunk_score_bytes)
+    # llama smoke (4 query heads, window=0 -> ring W = max_len):
+    # C=8 clips block_q, W+C=40 saturates block_kv=32
+    assert prefill_chunk_score_bytes(CFG, 8, max_len=32, kernel="blocked") \
+        == pytest.approx(2 * 4 * min(32, 8) * min(32, 32 + 8) * 4.0)
+    # hybrid: W = min(max_len=16, local_window=32) = 16, so W+C=24 < 32
+    # clips block_kv too
+    hyb = reduced_config(REGISTRY["recurrentgemma-9b"])
+    assert prefill_chunk_score_bytes(hyb, 8, max_len=16, kernel="blocked") \
+        == pytest.approx(2 * 4 * 8 * 24 * 4.0)
+    # W- and C-independence: once C and W+C exceed the block sizes the
+    # transient is exactly one tile, for ANY chunk/ring width
+    bound = 2 * CFG.n_heads * 32 * 32 * 4.0
+    for c_tokens, ml in ((32, 64), (256, 1024), (512, 4096), (4096, 65536)):
+        got = prefill_chunk_score_bytes(CFG, c_tokens, max_len=ml,
+                                        kernel="blocked")
+        assert got == pytest.approx(bound)
+    for c_tokens, ml in ((1, 8), (8, 32), (64, 4096)):
+        assert prefill_chunk_score_bytes(CFG, c_tokens, max_len=ml,
+                                         kernel="blocked") <= bound
+    # blocked strictly undercuts dense whenever the dense transient
+    # outgrows one tile
+    assert prefill_chunk_score_bytes(CFG, 16, max_len=512,
+                                     kernel="blocked") < \
+        prefill_chunk_score_bytes(CFG, 16, max_len=512)
+    # pure-state model: still zero
+    ssm = reduced_config(REGISTRY["mamba2-780m"])
+    assert prefill_chunk_score_bytes(ssm, 8, max_len=16,
+                                     kernel="blocked") == 0.0
+    # footprint composition threads the kernel through
+    for cfg, ml in ((CFG, 32), (hyb, 16)):
+        assert prefill_chunk_bytes(cfg, 8, ml, mode="parallel",
+                                   kernel="blocked") == \
+            pytest.approx(prefill_chunk_bytes(cfg, 8, ml)
+                          + prefill_chunk_score_bytes(cfg, 8, ml,
+                                                      kernel="blocked"))
+    with pytest.raises(ValueError):
+        prefill_chunk_score_bytes(CFG, 8, max_len=32, kernel="banded")
 
 
 def test_waitqueue_order_accessors():

@@ -9,7 +9,8 @@ from conftest import hypothesis_tools
 
 given, settings, st = hypothesis_tools()
 
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               ring_chunk_attention)
 from repro.kernels.flash_attention.ref import gqa_attention_ref
 from repro.kernels.rglru_scan.ops import lru
 from repro.kernels.rglru_scan.ref import lru_scan_ref
@@ -110,6 +111,104 @@ def test_blocked_attention_property(b, heads_pow, causal):
     ref = gqa_attention_ref(q, k, v, causal=bool(causal))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ring-chunk attention (serving fused-prefill kernel)
+# ---------------------------------------------------------------------------
+
+def _ring_case(B, C, W, Hq, Hkv, dh, pos, nt, window, softcap, bq, bkv,
+               dtype, seed=0):
+    """Blocked Pallas kernel (interpret) vs the dense chunk_attention
+    reference, row-by-row: active rows (t < n_tokens) must match; inactive
+    rows are discarded by the engine but must at least stay finite (the
+    kernel returns 0 where the dense path degrades to a uniform softmax)."""
+    from repro.models.layers import chunk_attention
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, C, Hq, dh), dtype)
+    kn = jax.random.normal(ks[1], (B, C, Hkv, dh), dtype)
+    vn = jax.random.normal(ks[2], (B, C, Hkv, dh), dtype)
+    kc = jax.random.normal(ks[3], (B, W, Hkv, dh), dtype)
+    vc = jax.random.normal(ks[4], (B, W, Hkv, dh), dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    nt = jnp.asarray(nt, jnp.int32)
+    ref = np.asarray(chunk_attention(q, kn, vn, kc, vc, pos, nt,
+                                     window=window, softcap=softcap),
+                     np.float32)
+    out = np.asarray(ring_chunk_attention(q, kn, vn, kc, vc, pos, nt,
+                                          window=window, softcap=softcap,
+                                          block_q=bq, block_kv=bkv,
+                                          interpret=True), np.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-5
+    for b in range(B):
+        n = int(nt[b])
+        np.testing.assert_allclose(out[b, :n], ref[b, :n], rtol=tol,
+                                   atol=tol, err_msg=f"stream {b}")
+        assert np.all(np.isfinite(out[b, n:])), f"stream {b} inactive rows"
+
+
+RING_SWEEP = [
+    # B, C, W, Hq, Hkv, dh, pos, nt, window, softcap, bq, bkv, dtype
+    (2, 4, 16, 4, 2, 32, (0, 3), (4, 2), 0, 0.0, 32, 32, jnp.float32),
+    (2, 6, 8, 4, 4, 16, (13, 27), (6, 6), 0, 0.0, 4, 4, jnp.float32),
+    (2, 10, 8, 4, 2, 16, (5, 21), (10, 7), 0, 0.0, 32, 32, jnp.float32),
+    (3, 4, 8, 2, 1, 16, (0, 5, 9), (0, 0, 4), 0, 0.0, 32, 32, jnp.float32),
+    (2, 8, 16, 4, 2, 32, (20, 3), (8, 5), 7, 30.0, 4, 8, jnp.float32),
+    (1, 4, 8, 8, 1, 32, (11,), (4,), 0, 0.0, 32, 32, jnp.float32),
+    (1, 5, 13, 2, 2, 16, (29,), (5,), 0, 0.0, 4, 8, jnp.float32),
+    (2, 6, 12, 4, 2, 32, (9, 15), (6, 3), 0, 0.0, 8, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize(
+    "B,C,W,Hq,Hkv,dh,pos,nt,window,softcap,bq,bkv,dtype", RING_SWEEP,
+    ids=["basic", "ring_wrap_tails", "chunk_wider_than_ring", "idle_rows",
+         "window_softcap", "gqa_group8", "nondivisible_bkv", "bf16"])
+def test_ring_chunk_attention_vs_dense(B, C, W, Hq, Hkv, dh, pos, nt,
+                                       window, softcap, bq, bkv, dtype):
+    _ring_case(B, C, W, Hq, Hkv, dh, pos, nt, window, softcap, bq, bkv,
+               dtype, seed=B * 31 + C)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**6))
+def test_ring_chunk_attention_property(seed):
+    """Randomized equivalence: random chunk/ring widths (incl. C > W),
+    positions (incl. ring wrap and pos=0), per-stream n_tokens (incl. 0),
+    GQA group sizes and block shapes that leave partial tail blocks."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 4))
+    C = int(rng.integers(1, 12))
+    W = int(rng.integers(2, 20))
+    G = int(rng.choice([1, 2, 4]))
+    Hkv = int(rng.choice([1, 2]))
+    dh = int(rng.choice([8, 16]))
+    pos = rng.integers(0, 3 * W, size=B)
+    nt = rng.integers(0, C + 1, size=B)
+    window = int(rng.choice([0, 0, max(1, W // 2)]))
+    softcap = float(rng.choice([0.0, 25.0]))
+    bq = int(rng.choice([3, 4, 8, 32]))
+    bkv = int(rng.choice([5, 8, 16, 32]))
+    _ring_case(B, C, W, G * Hkv, Hkv, dh, pos, nt, window, softcap, bq,
+               bkv, jnp.float32, seed=seed % 1009)
+
+
+def test_ring_chunk_attention_idle_stream_at_pos0_returns_zeros():
+    """A fully-masked row (idle stream with an empty ring) must come out
+    exactly 0 from the kernel — the online-softmax finalize guards its
+    zero normalizer instead of emitting NaN (the dense path's discarded
+    uniform-softmax row is the reference's equivalent hazard)."""
+    ks = jax.random.split(KEY, 5)
+    B, C, W, H, dh = 1, 4, 8, 2, 16
+    out = ring_chunk_attention(
+        jax.random.normal(ks[0], (B, C, H, dh)),
+        jax.random.normal(ks[1], (B, C, H, dh)),
+        jax.random.normal(ks[2], (B, C, H, dh)),
+        jax.random.normal(ks[3], (B, W, H, dh)),
+        jax.random.normal(ks[4], (B, W, H, dh)),
+        jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
 
 
 # ---------------------------------------------------------------------------
