@@ -44,10 +44,24 @@ decode rows under splitting.  ``--chunk-sweep`` sweeps chunk sizes x
 {path, kernel, split} at equal byte budget (``--prefill-chunk`` pins a
 single size).
 
+``--prefix-share`` runs the SHARED-PREFIX TENANT workload instead: T
+tenants, each with a fixed multi-page preamble (per-tenant lengths), one
+warm request per tenant publishing the preamble pages into the prefix
+index, then a burst of identical-prompt requests per tenant that must
+ATTACH those pages.  Two cells per mode: page-sized chunks (the prefill-
+skip measurement — every cache-hit request may run only its 1-chunk
+unshared tail, >=80% of prefill chunks skipped) and a whole-prompt first
+chunk (admission charges the full prompt, so the peak admitted
+concurrency at the same per-domain byte budget is the gate — sharing
+must admit STRICTLY more streams).  Token identity sharing-on vs
+sharing-off is asserted across both cells; ``--no-prefix-share`` reports
+the unshared baseline only.
+
     PYTHONPATH=src python benchmarks/serve_openloop.py                  # all 3
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked
     PYTHONPATH=src python benchmarks/serve_openloop.py --eager
     PYTHONPATH=src python benchmarks/serve_openloop.py --chunk-sweep
+    PYTHONPATH=src python benchmarks/serve_openloop.py --prefix-share --smoke
     PYTHONPATH=src python benchmarks/serve_openloop.py --smoke          # CI
     PYTHONPATH=src python benchmarks/serve_openloop.py --prefill-chunked \
         --evict-mode swap --smoke                                       # CI
@@ -194,6 +208,136 @@ def report(mode: str, args, eng, res):
           f"{moves}")
 
 
+def prefix_tenant_prompts(seed: int, tenant_pages, bt: int, vocab: int):
+    """One FIXED prompt per tenant: a preamble spanning ``tenant_pages[i]``
+    full KV pages plus one trailing token — the fully-shared-prefix case
+    (the final prompt token always recomputes to seed generation, so the
+    shareable prefix is exactly the full pages)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, vocab, size=p * bt + 1) for p in tenant_pages]
+
+
+def run_prefix_mode(args, cfg, *, share: bool, prefill_chunk,
+                    max_len: int, pool_streams: int, per_tenant: int,
+                    tenant_pages, max_new: int):
+    """Warmed tenant workload on ONE chiplet-group domain: a warm wave
+    (one request per tenant) publishes the preamble pages, then a burst
+    of ``per_tenant`` identical-prompt requests per tenant measures
+    cache-hit prefill and admission.  Returns the engine, its kv stats,
+    the burst wave's prefill-chunk count, the peak shared-page gauge and
+    all generated tokens."""
+    topo = ChipletTopology(n_pods=1, groups_per_pod=1, chips_per_group=1)
+    ecfg = EngineConfig(
+        max_batch=2 * per_tenant * len(tenant_pages), max_len=max_len,
+        adaptive=False, lazy=True, pool_streams=pool_streams,
+        evict_mode="swap", prefill_chunk=prefill_chunk,
+        prefill_mode=args.prefill_mode, chunk_kernel=args.chunk_kernel,
+        split_ticks=args.split_ticks, prefix_share=share)
+    eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
+    prompts = prefix_tenant_prompts(args.seed, tenant_pages,
+                                    eng.pool.block_tokens, cfg.vocab)
+    # prompts must stay inside the ring: a wrap would (correctly)
+    # invalidate the published pages and the bench would measure nothing
+    assert all(len(p) + max_new <= eng.pool.pages_per_stream
+               * eng.pool.block_tokens for p in prompts)
+    for p in prompts:                    # warm wave: publish the pages
+        eng.submit(p, max_new)
+    eng.run_until_done()
+    warm_chunks = eng.counters.totals.get("prefill_chunks", 0.0)
+    for p in prompts:                    # measurement burst: cache hits
+        for _ in range(per_tenant):
+            eng.submit(p, max_new)
+    eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "prefix bench deadlock"
+    eng.pool.audit([])
+    assert eng.pool.occupancy() == 0.0
+    burst_chunks = (eng.counters.totals.get("prefill_chunks", 0.0)
+                    - warm_chunks)
+    peak_shared = (max((s.kv_shared_pages for s in eng.counters.samples),
+                       default=0.0),
+                   max((s.kv_shared_bytes for s in eng.counters.samples),
+                       default=0.0))
+    return (eng, eng.kv_stats(), burst_chunks, peak_shared,
+            [r.generated for r in eng.submitted])
+
+
+def run_prefix_bench(args, cfg, *, compare: bool):
+    """The shared-prefix tenant workload (``--prefix-share`` /
+    ``--no-prefix-share``).  With ``compare`` (sharing requested) runs
+    every cell sharing-on AND sharing-off and asserts the ISSUE-7 gates:
+    token identity, >=80% of prefill chunks skipped for a fully-shared
+    prefix, and strictly more admitted concurrency at the same
+    per-domain byte budget."""
+    per_tenant = 2 if args.smoke else 4
+    tenant_pages = (5, 4)          # per-tenant preamble lengths, in pages
+    common = dict(max_len=96, pool_streams=3, per_tenant=per_tenant,
+                  tenant_pages=tenant_pages, max_new=8)
+    n_burst = per_tenant * len(tenant_pages)
+    cells = {}
+    for share in ((True, False) if compare else (False,)):
+        tag = "share" if share else "no-share"
+        # cell A — page-sized chunks: the prefill-skip measurement
+        eng_a, kv_a, chunks_a, shared_a, toks_a = run_prefix_mode(
+            args, cfg, share=share, prefill_chunk=None, **common)
+        # cell B — whole-prompt first chunk: admission charges the full
+        # prompt up front, so concurrency is admission-limited and the
+        # cached-prefix discount (charge only the unshared tail) is
+        # exactly what admits more streams
+        eng_b, kv_b, chunks_b, shared_b, toks_b = run_prefix_mode(
+            args, cfg, share=share, prefill_chunk=common["max_len"],
+            **common)
+        burst_a = eng_a.submitted[len(tenant_pages):]
+        emit([
+            row(f"prefix_burst_chunks[{tag}]", chunks_a,
+                f"{n_burst} cache-burst requests x tenants "
+                f"pages={tenant_pages}; hits={kv_a['prefix_hits']:.0f} "
+                f"tokens_skipped={kv_a['prefill_tokens_skipped']:.0f} "
+                f"pages_attached={kv_a['prefix_pages']:.0f}"),
+            row(f"prefix_burst_ttft_p50[{tag}]",
+                ServeEngine.stats(burst_a)["ttft_p50"] * 1e6,
+                f"burst wave only; cow_forks={kv_a['cow_forks']:.0f} "
+                f"peak_shared_pages={shared_a[0]:.0f} "
+                f"peak_dedup_bytes_saved={shared_a[1]:.0f}"),
+            row(f"prefix_admitted[{tag}]", kv_b["peak_active_tables"],
+                f"whole-prompt admission cell (budget="
+                f"{common['pool_streams']} streams/domain), peak_blocks="
+                f"{kv_b['peak_used_blocks']:.0f}/"
+                f"{kv_b['total_blocks']:.0f} "
+                f"alloc_failures={kv_b['alloc_failures']:.0f}"),
+        ])
+        cells[share] = (kv_a, chunks_a, toks_a, kv_b, toks_b)
+    if not compare:
+        return
+    kv_a, on_a, toks_a, kv_b, toks_b = cells[True]
+    kv_a0, off_a, toks_a0, kv_b0, toks_b0 = cells[False]
+    # gate 1: token identity, sharing on vs off, both cells (and across
+    # cells — the chunking policy must not change tokens either)
+    assert toks_a == toks_a0, "prefix sharing changed tokens (chunk cell)"
+    assert toks_b == toks_b0, \
+        "prefix sharing changed tokens (admission cell)"
+    assert toks_a == toks_b, "chunk-size cells diverged"
+    assert kv_a0["prefix_hits"] == 0 and kv_b0["prefix_hits"] == 0
+    # gate 2: every cache-burst request ran ONLY its 1-chunk unshared
+    # tail — >=80% of the prefill chunks the unshared run pays are
+    # skipped outright
+    skip = 1.0 - on_a / max(1.0, off_a)
+    assert on_a == n_burst, \
+        f"cache-hit burst ran {on_a:.0f} chunks, wanted {n_burst} tails"
+    assert skip >= 0.80, \
+        f"prefill-chunk skip {skip:.1%} below the 80% gate " \
+        f"({on_a:.0f} vs {off_a:.0f} chunks)"
+    # gate 3: strictly more admitted concurrency at the same byte budget
+    assert kv_b["peak_active_tables"] > kv_b0["peak_active_tables"], \
+        f"sharing admitted {kv_b['peak_active_tables']:.0f} streams, " \
+        f"unshared {kv_b0['peak_active_tables']:.0f} — not strictly more"
+    assert kv_a["prefix_hits"] >= n_burst
+    print(f"prefix sharing token-identical: True "
+          f"(chunk skip={skip:.1%}, admitted "
+          f"{kv_b['peak_active_tables']:.0f} vs "
+          f"{kv_b0['peak_active_tables']:.0f} streams at "
+          f"{common['pool_streams']} streams/domain)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=48)
@@ -235,6 +379,15 @@ def main():
                          "single-token step for decoders — instead of one "
                          "padded chunk forward where every decode stream "
                          "pays C-1 masked query rows")
+    ap.add_argument("--prefix-share", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="run ONLY the shared-prefix tenant workload: a "
+                         "warm wave publishes per-tenant preamble pages, "
+                         "then an identical-prompt burst must attach them. "
+                         "--prefix-share compares sharing on vs off and "
+                         "asserts token identity, >=80%% prefill-chunk "
+                         "skip and strictly higher admitted concurrency; "
+                         "--no-prefix-share reports the unshared baseline")
     ap.add_argument("--chunk-sweep", action="store_true",
                     help="sweep chunk sizes x {parallel, scan}: TTFT + "
                          "model steps per chunk tick + honest per-chunk "
@@ -251,6 +404,9 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
+    if args.prefix_share is not None:
+        run_prefix_bench(args, cfg, compare=args.prefix_share)
+        return
     if args.chunk_sweep:
         # chunk-size sweep at equal byte budget: every
         # (C, path, kernel, split) cell must generate identical tokens; the

@@ -193,6 +193,16 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
             + (kv_state_bytes(cfg) if with_state else 0.0))
 
 
+def kv_dedup_bytes(cfg: ModelConfig, shared_extra_refs: int,
+                   block_tokens: int) -> float:
+    """Ring-cache bytes prefix sharing keeps OFF the device right now:
+    every table->page reference beyond a shared page's first holder
+    (``shared_extra_refs``) is a page-sized footprint served without a
+    resident copy of its own.  Logical KV bytes = resident + this; the
+    benchmark reports both so capacity claims stay honest."""
+    return shared_extra_refs * block_tokens * kv_token_bytes(cfg)
+
+
 def prefill_chunk_score_bytes(cfg: ModelConfig, chunk_tokens: int,
                               max_len: int = 0, kernel: str = "dense",
                               block_q: int = 32, block_kv: int = 32) -> float:

@@ -54,6 +54,14 @@ class StepSample:
     # token step ((C-1) x decode streams per split tick) — delta since the
     # previous sample.
     mixed_tick_decode_rows_saved: float = 0.0
+    # Prefix sharing: admissions that attached shared prompt pages and
+    # prompt tokens whose prefill chunks were skipped entirely (deltas),
+    # plus the pool's current shared-page footprint — pages with refcount
+    # > 1 and the HBM bytes deduplication is saving right now (gauges).
+    kv_prefix_hits: float = 0.0
+    prefill_tokens_skipped: float = 0.0
+    kv_shared_pages: float = 0.0
+    kv_shared_bytes: float = 0.0
 
 
 class PerfCounters:
@@ -87,7 +95,11 @@ class PerfCounters:
                     kv_spilled_pages: float = 0.0,
                     kv_restores: float = 0.0,
                     recompute_tokens: float = 0.0,
-                    mixed_tick_decode_rows_saved: float = 0.0):
+                    mixed_tick_decode_rows_saved: float = 0.0,
+                    kv_prefix_hits: float = 0.0,
+                    prefill_tokens_skipped: float = 0.0,
+                    kv_shared_pages: float = 0.0,
+                    kv_shared_bytes: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -100,7 +112,10 @@ class PerfCounters:
                                        kv_mid_decode_parks, prefill_chunks,
                                        kv_spilled_pages, kv_restores,
                                        recompute_tokens,
-                                       mixed_tick_decode_rows_saved))
+                                       mixed_tick_decode_rows_saved,
+                                       kv_prefix_hits,
+                                       prefill_tokens_skipped,
+                                       kv_shared_pages, kv_shared_bytes))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

@@ -111,7 +111,12 @@ class GlobalScheduler:
                 kv_restores=step_metrics.get("kv_restores", 0.0),
                 recompute_tokens=step_metrics.get("recompute_tokens", 0.0),
                 mixed_tick_decode_rows_saved=step_metrics.get(
-                    "mixed_tick_decode_rows_saved", 0.0))
+                    "mixed_tick_decode_rows_saved", 0.0),
+                kv_prefix_hits=step_metrics.get("kv_prefix_hits", 0.0),
+                prefill_tokens_skipped=step_metrics.get(
+                    "prefill_tokens_skipped", 0.0),
+                kv_shared_pages=step_metrics.get("kv_shared_pages", 0.0),
+                kv_shared_bytes=step_metrics.get("kv_shared_bytes", 0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()

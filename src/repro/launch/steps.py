@@ -355,6 +355,28 @@ def make_spill_scatter(spec):
     return spill_scatter
 
 
+def make_prefix_fork(spec):
+    """(storage, src_blocks, dst_blocks[, src_state, dst_state]) ->
+    storage'.  The device-side copy behind prefix-sharing copy-on-write:
+    duplicate a shared ring page into a private block before a stream
+    writes it (the divergence / ring-wrap fork), and/or fork a carried
+    rgLRU/SSD state slot — a prefix-cache hit copying the donor's
+    checkpoint at the match boundary into the new stream's slot, or
+    registration snapshotting a checkpoint the other way."""
+
+    def prefix_fork(storage, src_blocks, dst_blocks,
+                    src_state=None, dst_state=None):
+        if not src_blocks and src_state is not None:
+            if src_state == 0:          # no donor: scrub to the init state
+                return dec.zero_state_slot(storage, spec, dst_state)
+            return dec.fork_state_slot(storage, spec, src_state, dst_state)
+        return dec.copy_pool_entries(storage, spec, src_blocks, dst_blocks,
+                                     src_state=src_state,
+                                     dst_state=dst_state)
+
+    return prefix_fork
+
+
 def make_generate(cfg: ModelConfig, steps: int, temperature: float = 0.0):
     """Greedy/temperature loop over serve_step (used by examples/serving)."""
     serve_step = make_serve_step(cfg)

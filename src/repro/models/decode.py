@@ -203,8 +203,12 @@ def scatter_cache_view(pool, spec: CacheViewSpec, tables, state_slots, view):
 
     Inverse of ``gather_cache_view``: each stream's W-token ring is split
     back into P pages and written to its table's physical blocks.  Streams
-    must not share real blocks; null-padded table entries all point at the
-    engine's null block, whose contents are never read.
+    MAY share real blocks (prefix-shared pages, refcount > 1) only under
+    the pool's copy-on-write invariant — a shared page is never written by
+    the model step (the engine forks it first), so the duplicate scatter
+    indices all carry the page's unchanged gathered bytes and last-write-
+    wins is exact.  Null-padded table entries all point at the engine's
+    null block, whose contents are never read.
     """
     B, P = tables.shape
     flat = tables.reshape(-1)
@@ -239,6 +243,37 @@ def copy_pool_entries(pool, spec: CacheViewSpec, src_blocks, dst_blocks,
         elif src_state is not None:
             vals = jnp.take(leaf, jnp.asarray([src_state]), axis=ax)
             leaf = leaf.at[idx + (jnp.asarray([dst_state]),)].set(vals)
+        out.append(leaf)
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def fork_state_slot(pool, spec: CacheViewSpec, src_state, dst_state):
+    """Copy ONE stream's carried-state leaves (rgLRU / SSD states) from
+    ``src_state`` into ``dst_state``, token pages untouched.
+
+    This is the state half of a prefix-cache hit: ring pages can be
+    attached by reference, but the per-stream state slot is POSITION-
+    dependent — the new stream needs the donor's state exactly at the
+    match boundary, forked into its own slot so the two streams diverge
+    freely afterwards.  Registration uses the same copy in the other
+    direction to snapshot a checkpoint at a page boundary."""
+    return copy_pool_entries(pool, spec, [], [],
+                             src_state=src_state, dst_state=dst_state)
+
+
+def zero_state_slot(pool, spec: CacheViewSpec, state_slot: int):
+    """Clear ONE state slot's carried-state leaves to the init (zero)
+    state.  A freed slot still holds its dead stream's FINAL rgLRU/SSD
+    state; the recurrence reads the slot at the new stream's first token,
+    so reusing a slot without clearing it corrupts the new stream's
+    tokens.  (Ring pages need no such scrub: attention masks them past
+    ``pos``.)"""
+    idx = jnp.asarray([state_slot])
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        if s.token_axis is None:
+            ax = s.batch_axis
+            leaf = leaf.at[(slice(None),) * ax + (idx,)].set(0)
         out.append(leaf)
     return jax.tree.unflatten(spec.treedef, out)
 

@@ -60,6 +60,15 @@ ARCAS mapping (the paper's runtime, applied to inference):
     free the victim and re-run it from scratch, which under greedy
     decoding regenerates the identical tokens at ``recompute_tokens``
     cost;
+  * prompt PREFIX SHARING (``EngineConfig(prefix_share=)``, default on for
+    lazy ring models): admission hashes the prompt page-by-page and asks
+    each candidate domain for the longest chain of already-resident pages;
+    a match attaches those pages REFCOUNTED (copy-on-write at ring-wrap)
+    and starts prefill at the first unmatched chunk boundary — skipped
+    chunks cost zero model steps AND zero fresh pages, so shared-preamble
+    tenants admit more concurrent streams from the same byte budget.  The
+    skip is computationally identical to resuming a parked stream at a
+    chunk boundary, so tokens are bit-identical to the unshared run;
   * an open-loop client coroutine (``open_loop_client``) shares the same
     TaskRuntime and submits requests over time from a seeded schedule, so
     steady-state adaptation and TTFT/TPOT tails are actually exercised.
@@ -114,6 +123,10 @@ class Request:
     t_done: Optional[float] = None
     migrations: int = 0                 # relayouts survived while in flight
     table: Optional[KVTable] = None     # paged mode: KV pages + state slot
+    prefix_tokens: int = 0              # prompt tokens served from shared
+                                        # prefix pages (prefill starts here)
+    page_keys: Optional[List[bytes]] = dataclasses.field(
+        default=None, repr=False, compare=False)  # prompt hash chain
     _kv_fn: Optional[Callable[[int], float]] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -179,6 +192,14 @@ class EngineConfig:
                                        # when the domain keeps this many
                                        # free blocks AFTER the first chunk
                                        # (k=0 = unguarded PR-3 behavior)
+    prefix_share: bool = True          # hash-matched prefix caching: new
+                                       # requests attach refcounted shared
+                                       # KV pages for prompt pages already
+                                       # resident in their domain and skip
+                                       # the matched prefill chunks; pages
+                                       # copy-on-write at ring-wrap.  Only
+                                       # active on the lazy paged path for
+                                       # models with ring pages
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -311,6 +332,11 @@ class ServeEngine:
                                            donate_argnums=(0,))
             ml = ecfg.max_len
             self._kv_fn = lambda n: kv_bytes_exact(cfg, n, ml)
+            # prefix sharing needs elastic tables (the skip resumes at a
+            # chunk boundary exactly like a restored park) and ring pages
+            # to share; eager and pure-state models run unshared
+            self._share = (self._lazy and ecfg.prefix_share
+                           and self.pool.pages_per_stream > 0)
             # prefill chunk: one KV page by default (ring models), the
             # configured page size for pure-state models (no ring pages)
             self._chunk = ecfg.prefill_chunk or (
@@ -326,6 +352,7 @@ class ServeEngine:
         else:
             self._kv_fn = None
             self._chunk = 1
+            self._share = False
         self._build_groups()
         self.sched.register_relayout(self._relayout)
 
@@ -368,23 +395,48 @@ class ServeEngine:
                       key=lambda d: (-self.pool.free_blocks(d),
                                      -self.pool.free_states(d), d))
 
-    def _try_admit(self, total_tokens: int, first_tokens: Optional[int]
+    def _try_admit(self, total_tokens: int, first_tokens: Optional[int],
+                   keys: Optional[List[bytes]] = None, prompt_len: int = 0
                    ) -> Tuple[Optional["_Group"], Optional[KVTable]]:
         """Sweep every group (least-pressured first) and every domain it
         owns; one logical alloc failure only when the whole pool is dry.
         Lazy admissions keep ``headroom`` blocks free in the granting
         domain so growth of in-flight streams is less likely to close the
-        incremental-allocation deadlock."""
+        incremental-allocation deadlock.
+
+        With ``keys`` (the prompt's page hash chain), candidate domains are
+        re-ranked by matched prefix length FIRST: a domain already holding
+        the prompt's pages admits the request onto shared refcounted pages
+        and charges only the unshared tail — both fewer pages AND fewer
+        prefill chunks.  Ties fall back to the pressure order."""
         headroom = self.ecfg.headroom if self._lazy else 0
-        for g in sorted(self.groups, key=lambda gr: (gr.kv_pressure(),
-                                                     len(gr.queue), gr.gid)):
-            for d in self._domain_order(g):
-                table = self.pool.reserve(d, total_tokens,
-                                          first_tokens=first_tokens,
-                                          headroom=headroom,
-                                          count_failure=False)
-                if table is not None:
-                    return g, table
+        cands = [(g, d)
+                 for g in sorted(self.groups,
+                                 key=lambda gr: (gr.kv_pressure(),
+                                                 len(gr.queue), gr.gid))
+                 for d in self._domain_order(g)]
+        matches: Dict[int, Tuple[List[int], int]] = {}
+        if keys:
+            matches = {d: self.pool.match_prefix(d, keys,
+                                                 prompt_len=prompt_len)
+                       for _, d in cands}
+            # stable sort: longest match first, pressure order inside ties
+            cands.sort(key=lambda gd: -len(matches[gd[1]][0]))
+        for g, d in cands:
+            shared, ckpt = matches.get(d, ((), 0))
+            first = first_tokens
+            if shared:
+                # the skip moves the first chunk past the shared pages
+                skip = len(shared) * self.pool.block_tokens
+                first = skip + min(self._chunk, max(1, prompt_len - skip))
+            table = self.pool.reserve(d, total_tokens,
+                                      first_tokens=first,
+                                      headroom=headroom,
+                                      count_failure=False,
+                                      prefix_blocks=shared,
+                                      prefix_state=ckpt)
+            if table is not None:
+                return g, table
         self.counters.add("kv_alloc_failures", 1)
         return None, None
 
@@ -432,17 +484,23 @@ class ServeEngine:
         # lazy: only the first chunk's pages are committed at admission
         first = (min(self._chunk, max(1, len(req.prompt)))
                  if self._lazy else None)
+        if self._share and req.page_keys is None:
+            req.page_keys = self.pool.prefix_keys(req.prompt)
         while True:
             if self.waiters.oldest() is not cell["task"]:
                 yield BLOCK             # not our turn: the grant cascade
                 continue                # (or a free) will wake the head
-            g, table = self._try_admit(total, first)
+            g, table = self._try_admit(total, first, req.page_keys,
+                                       len(req.prompt))
             if table is not None:
                 break
             yield BLOCK                 # woken by KVBlockPool.free
         self.waiters.remove(cell["task"])
         self.waiters.wake(1)            # maybe the next waiter fits too
         req.table = table
+        # shared prefix pages are already filled: prefill resumes at the
+        # first unmatched chunk boundary (identical to a restored park)
+        req.prefix_tokens = table.used_pages * self.pool.block_tokens
         req.group = g.gid
         self.queues.push(g.gid, req)
         return
@@ -616,13 +674,18 @@ class ServeEngine:
         need = self.pool.pages_needed(pos + n) - len(req.table.blocks)
         return n, need
 
-    def _grow_stream(self, req: Request, g: _Group, need: int) -> bool:
-        """Commit ``need`` more pages for a stream: its own domain first,
+    def _grow_stream(self, req: Request, g: _Group, need: int,
+                     forks: Tuple[int, ...] = ()) -> bool:
+        """Commit ``need`` more pages for a stream — and privatize (CoW)
+        any shared pages its next write touches — its own domain first,
         then any domain its replica group owns (migrating the used pages —
-        memory follows the stream's placement, never the reverse)."""
-        if self.pool.grow(req.table, need):
-            return True
+        memory follows the stream's placement, never the reverse; a
+        migration COPIES every page, so the moved table is private and the
+        pending forks dissolve)."""
         t = req.table
+        if (all(self.pool.cow_fork(t, p) for p in forks)
+                and self.pool.grow(t, need)):
+            return True
         for d in self._domain_order(g):
             if d == t.domain:
                 continue
@@ -673,8 +736,10 @@ class ServeEngine:
                     break
             else:
                 g = self._owner_group(req.table.domain)
-                _, need = self._next_chunk_need(req, rec.pos)
-                if self._grow_stream(req, g, max(need, 0)):
+                n, need = self._next_chunk_need(req, rec.pos)
+                forks = (self.pool.fork_pages(req.table, rec.pos, n)
+                         if self._share else [])
+                if self._grow_stream(req, g, max(need, 0), tuple(forks)):
                     break
             yield BLOCK                 # woken by KVBlockPool.free
         self.waiters.remove(rec.cell["task"])
@@ -702,7 +767,7 @@ class ServeEngine:
         for d in order:
             if self.pool.free_blocks(d) < sp.pages + grow_by:
                 continue
-            if self.pool.has_state and not self.pool.free_states(d):
+            if self.pool.has_state and not self.pool.state_available(d):
                 continue
             if not self.pool.migrate(t, d):     # spilled: free re-point
                 continue
@@ -833,9 +898,10 @@ class ServeEngine:
                 req.group = g.gid
             if self._lazy:
                 # the token loop prefills this stream chunk-by-chunk;
-                # admission just points a slot at position 0
+                # admission points a slot at the first unmatched prompt
+                # position (0 when no prefix pages were shared)
                 g.slots[slot] = req
-                g.pos_h[slot] = 0
+                g.pos_h[slot] = req.prefix_tokens
                 g.tok_h[slot] = 0
                 continue
             prompt = req.prompt[None, :]
@@ -874,16 +940,18 @@ class ServeEngine:
                     deco_rows: List[int]) -> np.ndarray:
         """A mixed tick as TWO compiled steps instead of one C-wide step.
 
-        The fused chunk forward runs over a COMPACTED batch holding only
-        the multi-token prefill streams (padded to a power-of-two bucket so
-        the number of distinct compiled shapes stays O(log max_batch)); the
-        single-token streams reuse the existing full-batch decode step with
-        every non-decode row pointed at the null table/state slot (reserved
-        id 0 — written but never read, the same convention empty slots use).
-        The two steps touch disjoint real pages, so running them back to
-        back over the donated storage is exact.  Decode streams thus pay 1
-        query row instead of C — the (C-1)·n_decode rows saved land in the
-        ``mixed_tick_decode_rows_saved`` counter.
+        BOTH halves run over COMPACTED batches padded to a power-of-two
+        bucket (so the number of distinct compiled shapes stays
+        O(log max_batch) per half): the fused chunk forward holds only the
+        multi-token prefill streams, the single-token step only the decode
+        streams.  Bucket padding rows point at the null table/state slot
+        (reserved id 0 — written but never read, the same convention empty
+        slots use).  The two steps touch disjoint real pages, so running
+        them back to back over the donated storage is exact.  Decode
+        streams thus pay 1 query row instead of C — the (C-1)·n_decode
+        rows saved land in ``mixed_tick_decode_rows_saved`` — and the
+        decode gather/scatter moves bucket-of-n_decode rows instead of
+        max_batch (``decode_gather_rows_saved``).
         """
         B = self.ecfg.max_batch
         P = self.pool.pages_per_stream
@@ -910,27 +978,38 @@ class ServeEngine:
             jnp.asarray(np.asarray(srows, np.int32)),
             jnp.asarray(toks_c), jnp.asarray(pos_c), jnp.asarray(n_c))
         nxt_c = np.asarray(dec.next_token_ids(logits_c, jnp.asarray(n_c)))
-        # -- decode half: the plain single-token step at full batch width
-        deco = set(deco_rows)
+        # -- decode half: the single-token step, compacted to its own bucket
+        Bd = 1
+        while Bd < len(deco_rows):
+            Bd *= 2
+        Bd = min(Bd, B)
+        rows_d = deco_rows + [None] * (Bd - len(deco_rows))
         trows, srows = zip(*(self._table_row(g.slots[i])
-                             if i in deco else self._table_row(None)
-                             for i in range(B)))
-        toks_d = np.zeros((B, 1), np.int32)
-        n_d = np.zeros((B,), np.int32)
-        for i in deco_rows:
-            toks_d[i, 0] = toks[i, 0]
-            n_d[i] = 1
+                             if i is not None else self._table_row(None)
+                             for i in rows_d))
+        toks_d = np.zeros((Bd, 1), np.int32)
+        pos_d = np.zeros((Bd,), np.int32)
+        n_d = np.zeros((Bd,), np.int32)
+        for j, i in enumerate(deco_rows):
+            toks_d[j, 0] = toks[i, 0]
+            pos_d[j] = g.pos_h[i]
+            n_d[j] = 1
         logits_d, self.pool.storage = self._paged_decode(
             self.params, self.pool.storage,
-            jnp.asarray(np.asarray(trows, np.int32).reshape(B, P)),
+            jnp.asarray(np.asarray(trows, np.int32).reshape(Bd, P)),
             jnp.asarray(np.asarray(srows, np.int32)),
-            jnp.asarray(toks_d), jnp.asarray(g.pos_h))
-        nxt = np.array(dec.next_token_ids(logits_d, jnp.asarray(n_d)))
+            jnp.asarray(toks_d), jnp.asarray(pos_d))
+        nxt_d = np.asarray(dec.next_token_ids(logits_d, jnp.asarray(n_d)))
+        nxt = np.full((B,), -1, np.int32)   # idle rows keep the sentinel
+        for j, i in enumerate(deco_rows):
+            nxt[i] = nxt_d[j]
         for j, i in enumerate(chunk_rows):
             nxt[i] = nxt_c[j]
         self.counters.add("split_ticks", 1)
         self.counters.add("mixed_tick_decode_rows_saved",
                           (C - 1) * len(deco_rows))
+        self.counters.add("decode_gather_rows_saved", B - Bd)
+        self.counters.add("decode_gather_null_rows", Bd - len(deco_rows))
         return nxt
 
     def _decode_tick(self, g: _Group):
@@ -949,10 +1028,18 @@ class ServeEngine:
             pos = int(g.pos_h[i])
             if req.table is not None and self.ecfg.paged:
                 n, need = self._next_chunk_need(req, pos)
-                if (self._lazy and self.pool.pages_per_stream and need > 0
-                        and not self._grow_stream(req, g, need)):
+                forks = (self.pool.fork_pages(req.table, pos, n)
+                         if self._share else [])
+                if (self._lazy and self.pool.pages_per_stream
+                        and (need > 0 or forks)
+                        and not self._grow_stream(req, g, max(need, 0),
+                                                  tuple(forks))):
                     self._park_stream(g, i)
                     continue
+                if self._share:
+                    # writing into a published page forks the page's index
+                    # entry off it (the OLD block keeps its entry)
+                    self.pool.note_writes(req.table, pos, n)
             else:
                 S = len(req.prompt)
                 n = min(self._chunk, S - pos) if pos < S else 1
@@ -1030,6 +1117,11 @@ class ServeEngine:
                     req.table.used_pages = min(
                         len(req.table.blocks),
                         self.pool.pages_needed(new_pos))
+                if self._share and req.page_keys:
+                    # publish the prompt pages this chunk completed so
+                    # later requests with the same prefix can attach
+                    self.pool.register_prefix(req.table, req.page_keys,
+                                              pos0, new_pos, S)
                 if new_pos < S:
                     continue            # mid-prompt: no token emitted yet
                 req.t_first = now
@@ -1073,7 +1165,8 @@ class ServeEngine:
         names = ("kv_alloc_failures", "kv_blocks_migrated", "kv_lazy_grows",
                  "kv_mid_decode_parks", "prefill_chunks",
                  "kv_spilled_pages", "kv_restores", "recompute_tokens",
-                 "mixed_tick_decode_rows_saved")
+                 "mixed_tick_decode_rows_saved",
+                 "kv_prefix_hits", "prefill_tokens_skipped")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -1083,7 +1176,9 @@ class ServeEngine:
             out = {"step_time": t1 - state["t"],
                    "kv_occupancy": self.pool.occupancy(),
                    "kv_parks": cur["kv_alloc_failures"]
-                   - state["kv_alloc_failures"]}
+                   - state["kv_alloc_failures"],
+                   "kv_shared_pages": float(self.pool.shared_pages()),
+                   "kv_shared_bytes": self.pool.shared_bytes()}
             for n in names[1:]:
                 out[n] = cur[n] - state[n]
             state.update(t=t1, **cur)
@@ -1133,6 +1228,8 @@ class ServeEngine:
         s["chunk_kernel"] = self._chunk_kernel
         s["mixed_tick_decode_rows_saved"] = self.counters.totals.get(
             "mixed_tick_decode_rows_saved", 0.0)
+        s["decode_gather_rows_saved"] = self.counters.totals.get(
+            "decode_gather_rows_saved", 0.0)
         s["decode_masked_query_rows"] = self.counters.totals.get(
             "decode_masked_query_rows", 0.0)
         s["prefill_model_steps"] = self.counters.totals.get(

@@ -31,6 +31,30 @@ and the unreserved tail of short tables point at them, so gather/scatter
 shapes stay static (jit-stable) while null contents are never read (ring
 positions past a stream's last token are masked by ``cache_positions``).
 
+PREFIX SHARING (copy-on-write pages).  Physical pages are REFCOUNTED: a
+page frees only when its last table releases it, so several tables may
+point at the same block.  Completed prompt pages are published into a
+prefix index keyed by the running token-hash chain (one blake2b digest per
+page, chained, seeded per model config — the prefill chunk size equals the
+page size, so chunk boundaries ARE page boundaries); a new request whose
+prompt hash-matches a resident chain attaches those pages at admission
+(``match_prefix`` + ``reserve(prefix_blocks=)``) and starts prefill at the
+match boundary — skipping both the allocation and the fused forward for
+every shared page.  Writes never touch a shared page: the engine calls
+``fork_pages``/``cow_fork`` before any tick whose ring writes would land
+on a refcount>1 page (the divergence write at a full-ring match and
+ordinary ring wrap-around are the two triggers), and ``note_writes``
+drops the index entry of any registered page about to be overwritten —
+pages older than the ring width W are dead and can never be matched.
+For models with carried state (rgLRU/SSD), the state slot is position-
+dependent: registration snapshots the donor's slot into a checkpoint slot
+at the page boundary and a match FORKS that checkpoint into the new
+stream's slot (``copy_pool_entries`` state copy).  Freed pages with a
+live index entry stay CACHED: they sit on the free list (reclaimable —
+allocation prefers uncached blocks and invalidates on reuse) but keep
+their entry, so a later identical prompt still hits after its donor
+finished.
+
 Budgets are expressed in *bytes* via ``costmodel.kv_cache_bytes`` and
 converted to blocks/state slots, so a pool can be sized to exactly the HBM
 footprint the old slot-monolith allocator used — or to a fraction of
@@ -38,14 +62,21 @@ footprint the old slot-monolith allocator used — or to a fraction of
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import math
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, \
+    Tuple
+
+import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.costmodel import kv_cache_bytes, kv_spill_bytes
+from repro.core.costmodel import kv_cache_bytes, kv_dedup_bytes, \
+    kv_spill_bytes
 from repro.core.counters import PerfCounters
-from repro.launch.steps import make_spill_gather, make_spill_scatter
+from repro.launch.steps import make_prefix_fork, make_spill_gather, \
+    make_spill_scatter
 from repro.models import decode as dec
 
 
@@ -65,6 +96,24 @@ class SpillEntry:
     pages: int                      # used pages held host-side
     data: List[Any]                 # host leaves from extract_pool_entries
     had_state: bool = False         # a state slot rides in ``data``
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One published prompt page in the prefix index: the resident block
+    holding tokens ``[o*bt, (o+1)*bt)`` of some prompt whose hash chain
+    ends at this entry's key, plus — for models with carried rgLRU/SSD
+    state — an optional checkpoint slot holding the donor's state at the
+    page boundary (0 = none; the entry then cannot END a match for a
+    state model, but can still sit in the middle of a longer chain).
+
+    The entry does NOT hold a refcount of its own: while some table holds
+    the block it is pinned anyway, and once the last holder releases it
+    the block goes back on the free list *still carrying the entry*
+    (cached) until allocation reuses it."""
+    block: int
+    domain: int
+    state_ckpt: int = 0
 
 
 @dataclasses.dataclass
@@ -146,6 +195,18 @@ class KVBlockPool:
         # swap tier: D2H/H2D copies of a table's used pages + state slot
         self._spill_gather = make_spill_gather(self.spec)
         self._spill_scatter = make_spill_scatter(self.spec)
+        # prefix sharing: per-block refcounts (a block frees only when the
+        # last table releases it), the hash-chain index of published
+        # prompt pages, and its block -> key reverse map for invalidation.
+        # The chain seed folds the model config in, so two pools with
+        # different families/shapes can never alias a digest.
+        self._ref: Dict[int, int] = {}
+        self._prefix: Dict[bytes, PrefixEntry] = {}
+        self._entry_of_block: Dict[int, bytes] = {}
+        self._prefix_seed = hashlib.blake2b(
+            repr((cfg, self.block_tokens, max_len)).encode(),
+            digest_size=16).digest()
+        self._prefix_fork = make_prefix_fork(self.spec)
         self.spilled_tables = 0         # tables currently host-resident
         self.spilled_bytes = 0.0        # swap-tier footprint right now
         self.peak_spilled_bytes = 0.0
@@ -229,15 +290,249 @@ class KVBlockPool:
         return self.used_blocks() / total
 
     def can_reserve(self, domain: int, pages: int) -> bool:
-        if self.has_state and not self._free_states[domain]:
+        if not self.state_available(domain):
             return False
         return len(self._free_blocks[domain]) >= pages
+
+    def state_available(self, domain: int) -> bool:
+        """A state slot can be produced in ``domain``: one is free, or a
+        prefix checkpoint is resident there to reclaim (cached state beats
+        a starving admission)."""
+        if not self.has_state:
+            return True
+        if self._free_states[domain]:
+            return True
+        return any(e.state_ckpt
+                   and self._state_domain(e.state_ckpt) == domain
+                   for e in self._prefix.values())
+
+    # -- refcounted physical blocks ----------------------------------------
+    def ref(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def _block_domain(self, b: int) -> int:
+        return (b - 1) // self.blocks_per_domain
+
+    def _state_domain(self, s: int) -> int:
+        return (s - 1) // self.states_per_domain
+
+    def _pop_block(self, domain: int) -> int:
+        """Take a free block at refcount 1, preferring blocks that do NOT
+        cache a published prefix page; when only cached blocks remain the
+        OLDEST free one is reclaimed and its index entry dropped."""
+        free = self._free_blocks[domain]
+        idx = len(free) - 1
+        if self._entry_of_block:
+            idx = next((i for i in range(len(free) - 1, -1, -1)
+                        if free[i] not in self._entry_of_block), 0)
+        b = free.pop(idx)
+        if b in self._entry_of_block:
+            self._invalidate_block(b)
+        self._ref[b] = 1
+        return b
+
+    def _release_block(self, b: int):
+        """Drop one reference; the block returns to ITS OWN domain's free
+        list only when the last holder lets go — a live index entry rides
+        along (cached) until :meth:`_pop_block` reuses the block."""
+        r = self._ref.get(b, 0) - 1
+        assert r >= 0, f"refcount underflow on block {b}"
+        if r > 0:
+            self._ref[b] = r
+        else:
+            self._ref.pop(b, None)
+            self._free_blocks[self._block_domain(b)].append(b)
+
+    def _invalidate_block(self, b: int):
+        """Drop the prefix entry published on ``b`` (its content is about
+        to change, or the cached block is being reallocated), returning
+        the entry's state checkpoint to the free list."""
+        key = self._entry_of_block.pop(b, None)
+        if key is None:
+            return
+        e = self._prefix.pop(key)
+        if e.state_ckpt:
+            self._free_states[self._state_domain(e.state_ckpt)].append(
+                e.state_ckpt)
+
+    def _take_state(self, domain: int) -> int:
+        """Pop a free state slot, reclaiming the oldest-registered prefix
+        checkpoint in the domain when none is free (admissions must never
+        starve behind cached state)."""
+        if self._free_states[domain]:
+            return self._free_states[domain].pop()
+        for e in self._prefix.values():
+            if e.state_ckpt and self._state_domain(e.state_ckpt) == domain:
+                s, e.state_ckpt = e.state_ckpt, 0
+                self.counters.add("kv_ckpt_reclaims", 1)
+                return s
+        raise IndexError(f"domain {domain}: no state slots available")
+
+    # -- prefix index: hash-chain keys, match, publish, invalidate ---------
+    def prefix_keys(self, tokens) -> List[bytes]:
+        """Running hash chain over the prompt's full pages: ``keys[o]``
+        digests tokens ``[0, (o+1)*bt)``, so equal keys mean equal whole
+        prefixes (not just equal pages).  Capped at the ring width — a
+        page past W can never survive to be shared."""
+        if not self.pages_per_stream:
+            return []
+        bt = self.block_tokens
+        arr = np.ascontiguousarray(np.asarray(tokens, np.int64))
+        n = min(arr.shape[0] // bt, self.pages_per_stream)
+        keys, h = [], self._prefix_seed
+        for o in range(n):
+            h = hashlib.blake2b(h + arr[o * bt:(o + 1) * bt].tobytes(),
+                                digest_size=16).digest()
+            keys.append(h)
+        return keys
+
+    def match_prefix(self, domain: int, keys: Sequence[bytes], *,
+                     prompt_len: int) -> Tuple[List[int], int]:
+        """Longest run of resident prefix pages in ``domain`` matching the
+        prompt's hash chain -> (their blocks, the donor state checkpoint
+        at the match boundary; 0 for stateless models).
+
+        The match is capped at ``(prompt_len-1)//bt`` pages so at least
+        the prompt's final token is always recomputed — its logits seed
+        generation.  For models with carried state the match ends at the
+        deepest entry that HAS a checkpoint (the state at the boundary is
+        as necessary as the pages)."""
+        if not keys or not self.pages_per_stream:
+            return [], 0
+        limit = min(len(keys), (max(prompt_len, 1) - 1) // self.block_tokens,
+                    self.pages_per_stream)
+        blocks: List[int] = []
+        best, ckpt = 0, 0
+        for o in range(limit):
+            e = self._prefix.get(keys[o])
+            if e is None or e.domain != domain:
+                break
+            blocks.append(e.block)
+            if not self.has_state:
+                best = o + 1
+            elif e.state_ckpt:
+                best, ckpt = o + 1, e.state_ckpt
+        return blocks[:best], ckpt
+
+    def register_prefix(self, table: KVTable, keys: Sequence[bytes],
+                        pos0: int, new_pos: int, prompt_len: int):
+        """Publish the prompt pages a prefill tick just completed (the
+        stream advanced ``pos0 -> new_pos``) into the prefix index.
+
+        A page is published only while its content is exactly prompt
+        tokens ``[o*bt, (o+1)*bt)``: fully inside the prompt, ordinal
+        below the ring width, and not already re-written by ring wrap
+        within this same tick.  For models with carried state a
+        checkpoint of the stream's slot is snapped when the tick ended
+        exactly at the page boundary and a free slot exists (purely
+        opportunistic — checkpoints never compete with admissions)."""
+        if not self.pages_per_stream or not keys:
+            return
+        bt, W = self.block_tokens, self.spec.width
+        for o in range(max(pos0 // bt, 0),
+                       min(new_pos, prompt_len) // bt):
+            if o >= min(len(keys), self.pages_per_stream,
+                        len(table.blocks)):
+                break
+            if new_pos > o * bt + W:
+                continue        # wrapped inside this very tick: dead page
+            key = keys[o]
+            b = table.blocks[o]
+            if key in self._prefix or b in self._entry_of_block:
+                continue        # already published (or block backs a key)
+            ckpt = 0
+            if self.has_state and new_pos == (o + 1) * bt \
+                    and self._free_states[table.domain]:
+                ckpt = self._free_states[table.domain].pop()
+                self.storage = self._prefix_fork(
+                    self.storage, [], [],
+                    src_state=table.state_slot, dst_state=ckpt)
+            self._prefix[key] = PrefixEntry(b, table.domain, ckpt)
+            self._entry_of_block[b] = key
+            self.counters.add("kv_prefix_pages_published", 1)
+
+    def _write_pages(self, pos: int, n: int, n_blocks: int) -> List[int]:
+        """Ring-page indices the next ``n``-token write at ``pos``
+        touches (a chunk wider than the ring touches every page)."""
+        W = self.spec.width
+        bt = self.block_tokens
+        if n >= W:
+            return list(range(min(self.pages_per_stream, n_blocks)))
+        pages = sorted({(p % W) // bt for p in range(pos, pos + n)})
+        return [j for j in pages if j < n_blocks]
+
+    def fork_pages(self, table: KVTable, pos: int, n: int) -> List[int]:
+        """Ring pages the next tick writes that are SHARED (refcount > 1)
+        and must be copied first — the CoW trigger set.  Covers both the
+        divergence write of a full-ring match (which wraps straight into
+        shared page 0) and ordinary ring wrap-around during decode."""
+        if not self.pages_per_stream or table.spill is not None \
+                or not table.blocks:
+            return []
+        return [j for j in self._write_pages(pos, n, len(table.blocks))
+                if self._ref.get(table.blocks[j], 0) > 1]
+
+    def cow_fork(self, table: KVTable, page: int) -> bool:
+        """Copy-on-write: give ``table`` a private copy of shared ring
+        page ``page`` before it is written.  False (no block taken) when
+        the table's domain has no free block — the caller parks the
+        stream, exactly like a failed grow."""
+        old = table.blocks[page]
+        if self._ref.get(old, 0) <= 1:
+            return True
+        if not self._free_blocks[table.domain]:
+            self.counters.add("kv_grow_failures", 1)
+            return False
+        new = self._pop_block(table.domain)
+        self.storage = self._prefix_fork(self.storage, [old], [new])
+        self._release_block(old)    # other holders keep the original
+        table.blocks[page] = new
+        self.counters.add("kv_blocks_allocated", 1)
+        self.counters.add("kv_cow_forks", 1)
+        self._note_usage(table.domain)
+        return True
+
+    def note_writes(self, table: KVTable, pos: int, n: int):
+        """A write makes a page's content diverge from what the prefix
+        index published: drop the entry of every page the next tick
+        writes.  (CoW-forked pages already moved the table onto a private
+        block, so the OLD block's entry — whose content is untouched —
+        survives for its other holders and future matches.)"""
+        if not self._entry_of_block or not self.pages_per_stream \
+                or table.spill is not None:
+            return
+        for j in self._write_pages(pos, n, len(table.blocks)):
+            b = table.blocks[j]
+            if b in self._entry_of_block:
+                self._invalidate_block(b)
+
+    # -- shared-page gauges ------------------------------------------------
+    def shared_pages(self) -> int:
+        """Physical pages currently held by more than one table."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    def shared_extra_refs(self) -> int:
+        """Table->page references served WITHOUT a resident copy of their
+        own — the dedup win in pages."""
+        return sum(r - 1 for r in self._ref.values() if r > 1)
+
+    def cached_pages(self) -> int:
+        """Free-list blocks still carrying a published prefix page."""
+        return sum(1 for b in self._entry_of_block
+                   if self._ref.get(b, 0) == 0)
+
+    def shared_bytes(self) -> float:
+        """Bytes NOT resident thanks to page dedup (costmodel-priced)."""
+        return kv_dedup_bytes(self.cfg, self.shared_extra_refs(),
+                              self.block_tokens)
 
     # -- alloc / free ------------------------------------------------------
     def reserve(self, domain: int, total_tokens: int, *,
                 first_tokens: Optional[int] = None,
                 headroom: int = 0,
-                count_failure: bool = True) -> Optional[KVTable]:
+                count_failure: bool = True,
+                prefix_blocks: Optional[Sequence[int]] = None,
+                prefix_state: int = 0) -> Optional[KVTable]:
         """Reserve a table for a stream of ``total_tokens`` context in
         ``domain``; None when the domain cannot serve it right now.
 
@@ -257,7 +552,14 @@ class KVBlockPool:
         throttle, never livelock).
 
         ``count_failure=False`` lets a caller probing several domains count
-        one logical failure instead of one per domain."""
+        one logical failure instead of one per domain.
+
+        ``prefix_blocks`` (from :meth:`match_prefix`, same domain) are
+        ALREADY-RESIDENT pages the new table attaches by reference — the
+        budget charges only the unshared tail, so a fully-cached prompt
+        admits even at high occupancy (its pages are free by definition).
+        ``prefix_state`` forks the donor's carried-state checkpoint at the
+        match boundary into the fresh slot."""
         cap = self.pages_needed(total_tokens)
         if cap > max(self.blocks_per_domain, 0) and cap:
             raise ValueError(
@@ -265,24 +567,51 @@ class KVBlockPool:
                 f"{self.blocks_per_domain}: raise the pool budget")
         if self.has_state and self.states_per_domain == 0:
             raise ValueError("pool has no state slots but model needs them")
+        shared = list(prefix_blocks or ())
         pages = cap if first_tokens is None else \
             min(cap, self.pages_needed(first_tokens))
+        # prefix hits are already resident: charge only the unshared tail.
+        # CACHED hits (refcount 0) do sit on the free list though — the
+        # attach below pulls them off, so they count against it here or
+        # _pop_block would run the list dry.
+        pages = max(pages - len(shared), 0)
+        cached = sum(1 for b in shared if self._ref.get(b, 0) == 0)
         headroom = min(headroom if pages else 0,
                        max(0, self.blocks_per_domain - pages))
-        if not self.can_reserve(domain, pages + headroom):
+        if not self.can_reserve(domain, pages + cached + headroom):
             if count_failure:
                 self.counters.add("kv_alloc_failures", 1)
             return None
-        blocks = [self._free_blocks[domain].pop() for _ in range(pages)]
-        slot = self._free_states[domain].pop() if self.has_state else 0
+        for b in shared:        # attach AFTER the capacity check
+            r = self._ref.get(b, 0)
+            if r == 0:          # cached page comes back off the free list
+                self._free_blocks[domain].remove(b)
+            self._ref[b] = r + 1
+        blocks = shared + [self._pop_block(domain) for _ in range(pages)]
+        slot = self._take_state(domain) if self.has_state else 0
+        if self.has_state:
+            # the slot is position-dependent: fork the donor's rgLRU/SSD
+            # checkpoint at the match boundary — or, with no donor, SCRUB
+            # the slot (a recycled slot still holds its dead stream's
+            # final state, which the recurrence would read at token 0)
+            self.storage = self._prefix_fork(
+                self.storage, [], [],
+                src_state=prefix_state, dst_state=slot)
         self.counters.add("kv_blocks_allocated", pages)
         self.counters.add("kv_reservations", 1)
+        if shared:
+            self.counters.add("kv_prefix_hits", 1)
+            self.counters.add("kv_prefix_pages", len(shared))
+            self.counters.add("prefill_tokens_skipped",
+                              len(shared) * self.block_tokens)
         self.active_tables += 1
         self.peak_active_tables = max(self.peak_active_tables,
                                       self.active_tables)
         self._note_usage(domain)
-        return KVTable(domain, blocks, slot,
-                       cap_pages=cap if first_tokens is not None else 0)
+        table = KVTable(domain, blocks, slot,
+                        cap_pages=cap if first_tokens is not None else 0)
+        table.used_pages = len(shared)   # matched pages are valid content
+        return table
 
     def grow(self, table: KVTable, n_pages: int) -> bool:
         """Append ``n_pages`` ring pages to an elastic table (same domain),
@@ -300,7 +629,7 @@ class KVBlockPool:
         if len(self._free_blocks[table.domain]) < n_pages:
             self.counters.add("kv_grow_failures", 1)
             return False
-        table.blocks.extend(self._free_blocks[table.domain].pop()
+        table.blocks.extend(self._pop_block(table.domain)
                             for _ in range(n_pages))
         self.counters.add("kv_blocks_allocated", n_pages)
         self.counters.add("kv_lazy_grows", 1)
@@ -311,8 +640,11 @@ class KVBlockPool:
         """Return a table's pages + state slot and fire the free callbacks
         (which unblock BLOCK-parked admission coroutines).  Freeing a
         SPILLED table drops its host payload too (the restart-eviction
-        fallback path)."""
-        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        fallback path).  Shared pages only DECREF — they stay resident for
+        their other holders (and for future prefix matches: a page whose
+        last holder lets go parks on the free list still cached)."""
+        for b in sorted(table.blocks):
+            self._release_block(b)
         if self.has_state and table.state_slot:
             self._free_states[table.domain].append(table.state_slot)
         self.counters.add("kv_blocks_freed", len(table.blocks))
@@ -347,7 +679,11 @@ class KVBlockPool:
             self.storage, table.blocks[:used],
             state_slot=table.state_slot if had_state else None)
         table.spill = SpillEntry(pages=used, data=data, had_state=had_state)
-        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        # the host payload COPIED every used page (shared ones included),
+        # so releasing shared pages here is safe: the other holders keep
+        # the device copy, this table restores a private one
+        for b in sorted(table.blocks):
+            self._release_block(b)
         if had_state:
             self._free_states[table.domain].append(table.state_slot)
         self.counters.add("kv_blocks_freed", len(table.blocks))
@@ -376,11 +712,11 @@ class KVBlockPool:
             return True
         d = table.domain
         if (len(self._free_blocks[d]) < sp.pages
-                or (self.has_state and not self._free_states[d])):
+                or not self.state_available(d)):
             self.counters.add("kv_restore_failures", 1)
             return False
-        blocks = [self._free_blocks[d].pop() for _ in range(sp.pages)]
-        slot = self._free_states[d].pop() if self.has_state else 0
+        blocks = [self._pop_block(d) for _ in range(sp.pages)]
+        slot = self._take_state(d) if self.has_state else 0
         self.storage = self._spill_scatter(
             self.storage, blocks, sp.data,
             state_slot=slot if sp.had_state else None)
@@ -417,12 +753,10 @@ class KVBlockPool:
             return True
         pages = len(table.blocks)
         if (len(self._free_blocks[new_domain]) < pages
-                or (self.has_state and not self._free_states[new_domain])):
+                or not self.state_available(new_domain)):
             return False
-        new_blocks = [self._free_blocks[new_domain].pop()
-                      for _ in range(pages)]
-        new_slot = (self._free_states[new_domain].pop()
-                    if self.has_state else 0)
+        new_blocks = [self._pop_block(new_domain) for _ in range(pages)]
+        new_slot = self._take_state(new_domain) if self.has_state else 0
         used = table.used_pages
         if used or (self.has_state and table.state_slot):
             self.storage = dec.copy_pool_entries(
@@ -430,7 +764,12 @@ class KVBlockPool:
                 table.blocks[:used], new_blocks[:used],
                 src_state=table.state_slot if self.has_state else None,
                 dst_state=new_slot if self.has_state else None)
-        self._free_blocks[table.domain].extend(sorted(table.blocks))
+        # migration COPIES used pages into the new domain, so the moved
+        # table's copies are private; shared originals decref and remain
+        # with their other holders (relayout of a refcount>1 table works
+        # without ever re-pointing someone else's pages)
+        for b in sorted(table.blocks):
+            self._release_block(b)
         if self.has_state and table.state_slot:
             self._free_states[table.domain].append(table.state_slot)
         self.counters.add("kv_blocks_migrated", used)
@@ -456,27 +795,42 @@ class KVBlockPool:
         self.counters.set("kv_active_tables", float(self.active_tables))
         self.counters.set("kv_spilled_tables", float(self.spilled_tables))
         self.counters.set("kv_spilled_bytes", self.spilled_bytes)
+        self.counters.set("kv_shared_pages", float(self.shared_pages()))
+        self.counters.set("kv_shared_bytes", self.shared_bytes())
+        self.counters.set("kv_cached_pages", float(self.cached_pages()))
 
     # -- consistency -------------------------------------------------------
     def audit(self, tables: Iterable[KVTable] = ()):
-        """Assert exact free-list accounting: free lists hold unique ids
-        inside their domain's range, every live table's blocks are disjoint
-        from the free lists and from each other, and held + free covers the
-        pool EXACTLY — ``tables`` must therefore be every live table (a
-        block in neither a table nor a free list is a leak).  The
-        oversubscription stress suite calls this after every
-        spill/restore/free cycle; raises AssertionError on any leak."""
-        held_blocks: List[int] = []
+        """Assert exact free-list AND refcount accounting: free lists hold
+        unique ids inside their domain's range at refcount 0, every held
+        block's refcount equals EXACTLY the number of live tables pointing
+        at it (sharing is legal only through the refcount), unique held
+        blocks + free covers the pool EXACTLY, and the prefix index is
+        consistent — every entry's block is resident (held or cached on
+        the free list), the block->key reverse map is a bijection, and
+        state checkpoints are disjoint from held/free slots with
+        held + free + checkpoints covering all slots.  ``tables`` must be
+        every live table (a block in neither a table nor a free list is a
+        leak).  The stress suites call this after every
+        spill/restore/migrate/free/fork; raises AssertionError on any
+        leak."""
+        held = collections.Counter()
         held_states: List[int] = []
         for t in tables:
             if t.spill is not None:
                 assert not t.blocks and not t.state_slot, \
                     f"spilled table holds device resources: {t}"
-            held_blocks.extend(t.blocks)
+            held.update(t.blocks)
             if self.has_state and t.state_slot:
                 held_states.append(t.state_slot)
-        assert len(held_blocks) == len(set(held_blocks)), \
-            "live tables share physical blocks"
+        # refcounts are exact: one count per live table holding the block
+        for b, c in held.items():
+            assert self._ref.get(b, 0) == c, \
+                f"block {b}: refcount {self._ref.get(b, 0)} != {c} holders"
+        assert set(self._ref) == set(held), \
+            f"refcount on unheld blocks: {set(self._ref) - set(held)}"
+        assert len(held_states) == len(set(held_states)), \
+            "live tables share a state slot"
         for d in range(self.n_domains):
             lo = 1 + d * self.blocks_per_domain
             free = self._free_blocks[d]
@@ -489,18 +843,38 @@ class KVBlockPool:
             assert all(slo <= s < slo + self.states_per_domain
                        for s in sfree), f"domain {d}: state outside range"
         all_free = [b for f in self._free_blocks for b in f]
-        assert not set(held_blocks) & set(all_free), \
-            "block is both free and held"
+        assert not set(held) & set(all_free), "block is both free and held"
         all_sfree = [s for f in self._free_states for s in f]
         assert not set(held_states) & set(all_sfree), \
             "state slot is both free and held"
-        assert len(held_blocks) + len(all_free) == self.total_blocks(), \
-            f"block leak: {len(held_blocks)} held + {len(all_free)} free " \
+        assert len(set(held)) + len(all_free) == self.total_blocks(), \
+            f"block leak: {len(set(held))} held + {len(all_free)} free " \
             f"!= {self.total_blocks()} total"
+        # prefix index: entries point at resident blocks, reverse map is a
+        # bijection, checkpoints account exactly
+        free_set = set(all_free)
+        for key, e in self._prefix.items():
+            assert self._entry_of_block.get(e.block) == key, \
+                f"prefix entry {key.hex()} reverse map broken"
+            assert e.block in held or e.block in free_set, \
+                f"prefix entry points at non-resident block {e.block}"
+            assert self._block_domain(e.block) == e.domain, \
+                f"prefix entry domain mismatch on block {e.block}"
+        assert len(self._entry_of_block) == len(self._prefix), \
+            "block->key map out of sync with the prefix index"
+        ckpts = [e.state_ckpt for e in self._prefix.values()
+                 if e.state_ckpt]
+        assert len(ckpts) == len(set(ckpts)), "duplicate state checkpoints"
+        assert not set(ckpts) & set(all_sfree), \
+            "state checkpoint is also free"
+        assert not set(ckpts) & set(held_states), \
+            "state checkpoint is also held by a table"
         total_states = self.n_domains * self.states_per_domain
-        assert len(held_states) + len(all_sfree) == total_states, \
+        assert len(held_states) + len(all_sfree) + len(ckpts) \
+            == total_states, \
             f"state-slot leak: {len(held_states)} held + " \
-            f"{len(all_sfree)} free != {total_states} total"
+            f"{len(all_sfree)} free + {len(ckpts)} ckpt " \
+            f"!= {total_states} total"
 
     # -- stats -------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -533,4 +907,23 @@ class KVBlockPool:
             "bytes_per_domain": self.domain_bytes(),
             "prefill_chunk_bytes": prefill_chunk_bytes(
                 self.cfg, self.block_tokens, self.max_len),
+            # prefix sharing: hits/pages are totals, shared/cached are
+            # right-now gauges; resident bytes are PHYSICAL (each shared
+            # page counted once) vs the logical sum over tables
+            "prefix_hits": snap.get("kv_prefix_hits", 0.0),
+            "prefix_pages": snap.get("kv_prefix_pages", 0.0),
+            "prefill_tokens_skipped": snap.get("prefill_tokens_skipped",
+                                               0.0),
+            "prefix_pages_published": snap.get("kv_prefix_pages_published",
+                                               0.0),
+            "cow_forks": snap.get("kv_cow_forks", 0.0),
+            "ckpt_reclaims": snap.get("kv_ckpt_reclaims", 0.0),
+            "shared_pages": float(self.shared_pages()),
+            "shared_extra_refs": float(self.shared_extra_refs()),
+            "cached_pages": float(self.cached_pages()),
+            "shared_bytes": self.shared_bytes(),
+            "resident_kv_bytes": self.used_blocks() * self.bytes_per_block(),
+            "logical_kv_bytes": (self.used_blocks()
+                                 + self.shared_extra_refs())
+            * self.bytes_per_block(),
         }

@@ -1,0 +1,489 @@
+"""Prefix-sharing copy-on-write KV pages (ISSUE 7).
+
+The acceptance property: for randomized shared-preamble workloads — across
+spill/restore pressure, restart eviction and forced relayouts of
+refcount>1 tables — a sharing-enabled engine generates tokens IDENTICAL to
+the unshared run, while the pool's refcount/prefix-index/checkpoint
+accounting audits clean after every refcounted operation.
+
+Deterministic companions pin the mechanisms one by one: the hash-chain
+index lifecycle (publish -> match -> attach -> CoW -> cached retention ->
+reuse), the satellite bugfix (a fully-cached prompt charges only its
+unshared tail, so it admits when the pool has almost nothing free), ring-
+wrap CoW forks, hybrid-model state checkpoints, and the audit actually
+catching refcount corruption.
+"""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import REGISTRY, reduced_config
+from repro.core.topology import ChipletTopology
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.kvpool import KVBlockPool
+
+given, settings, st = hypothesis_tools()
+
+CFG = reduced_config(REGISTRY["llama3-8b"])
+HYB = reduced_config(REGISTRY["recurrentgemma-9b"])
+
+
+def _engine(cfg=CFG, *, groups=1, max_batch=2, max_len=48, pool_streams=2,
+            share=True, evict_mode="swap", adaptive=False, **ecfg_kw):
+    topo = ChipletTopology(n_pods=1, groups_per_pod=groups,
+                           chips_per_group=1)
+    ecfg = EngineConfig(max_batch=max_batch, max_len=max_len, paged=True,
+                        lazy=True, pool_streams=pool_streams,
+                        adaptive=adaptive, evict_mode=evict_mode,
+                        prefix_share=share, **ecfg_kw)
+    return ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=0)
+
+
+def _instrument(eng):
+    """Audit the pool's refcount/index/checkpoint accounting after EVERY
+    refcounted operation the engine can trigger."""
+    pool = eng.pool
+
+    def live_tables():
+        return [r.table for r in eng.submitted if r.table is not None]
+
+    from repro.serving.kvpool import KVTable
+
+    for name in ("reserve", "grow", "free", "spill", "restore", "migrate",
+                 "cow_fork", "register_prefix", "note_writes"):
+        orig = getattr(pool, name)
+
+        def wrapped(*a, _orig=orig, **kw):
+            out = _orig(*a, **kw)
+            extra = [out] if isinstance(out, KVTable) else []
+            pool.audit(live_tables() + extra)     # a fresh reservation is
+            return out                            # not yet on its Request
+
+        setattr(pool, name, wrapped)
+
+
+def _drain(eng):
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "allocation deadlock"
+    return res
+
+
+def _preamble_prompts(rng, n, pre_len, tail_max):
+    """n prompts sharing a ``pre_len``-token preamble with random tails —
+    the multi-tenant system-prompt workload prefix caching exists for."""
+    pre = rng.integers(2, CFG.vocab, size=pre_len)
+    return [np.concatenate([pre, rng.integers(2, CFG.vocab,
+                                              size=int(rng.integers(1, tail_max)))])
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property (randomized shared-preamble schedules)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6),
+       evict_mode=st.sampled_from(("swap", "restart")))
+def test_token_identity_sharing_property(seed, evict_mode):
+    """Sharing on vs off over an OVERSUBSCRIBED pool (spills/evictions
+    and mid-decode parks fire) with shared-preamble arrivals over time:
+    identical tokens, clean audits throughout, pool drains to zero."""
+    rng = np.random.default_rng(seed)
+    prompts = _preamble_prompts(rng, 8, 2 * 16, 12)
+    sched = [(int(rng.integers(0, 5)), p, int(rng.integers(2, 10)))
+             for p in prompts]
+
+    def run(share):
+        eng = _engine(groups=1, max_batch=2, max_len=64, pool_streams=2,
+                      share=share, evict_mode=evict_mode)
+        _instrument(eng)
+        eng.open_loop_client(iter(sched))
+        _drain(eng)
+        eng.pool.audit([])
+        assert eng.pool.occupancy() == 0.0
+        return [r.generated for r in eng.submitted], eng.kv_stats()
+
+    gen_on, s_on = run(True)
+    gen_off, s_off = run(False)
+    assert gen_on == gen_off
+    assert s_off["prefix_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the index lifecycle, pinned (pool-level)
+# ---------------------------------------------------------------------------
+
+def test_pool_prefix_index_lifecycle():
+    """publish -> match -> refcounted attach -> free -> cached retention
+    -> cached reuse, auditing at every step."""
+    pool = KVBlockPool(CFG, n_domains=2, max_len=32, blocks_per_domain=4,
+                       states_per_domain=4, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, CFG.vocab, size=2 * bt + 3)
+    keys = pool.prefix_keys(prompt)
+    assert len(keys) == 2
+
+    t1 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt))
+    pool.audit([t1])
+    # nothing published yet: no match
+    assert pool.match_prefix(0, keys, prompt_len=len(prompt)) == ([], 0)
+    pool.register_prefix(t1, keys, 0, 2 * bt, len(prompt))
+    pool.audit([t1])
+    blocks, ckpt = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    assert blocks == t1.blocks[:2] and ckpt == 0
+    # wrong domain: no match
+    assert pool.match_prefix(1, keys, prompt_len=len(prompt)) == ([], 0)
+
+    t2 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    pool.audit([t1, t2])
+    assert t2.blocks[:2] == t1.blocks[:2]
+    assert t2.used_pages == 2
+    assert pool.shared_pages() == 2 and pool.shared_extra_refs() == 2
+    assert pool.stats()["logical_kv_bytes"] > pool.stats()["resident_kv_bytes"]
+
+    # a write into a shared page must be forked first
+    page = pool.fork_pages(t2, 0, bt)
+    assert page == [0]
+    assert pool.cow_fork(t2, 0)
+    pool.audit([t1, t2])
+    assert t2.blocks[0] != t1.blocks[0]
+    pool.note_writes(t2, 0, bt)
+    pool.audit([t1, t2])
+    # t1's entry survives the fork (the OLD block keeps it)
+    assert pool.match_prefix(0, keys,
+                             prompt_len=len(prompt))[0] == t1.blocks[:2]
+
+    pool.free(t2)
+    pool.audit([t1])
+    pool.free(t1)
+    pool.audit([])
+    assert pool.occupancy() == 0.0
+    # cached retention: freed-but-indexed pages still match and re-attach
+    assert pool.cached_pages() >= 2
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    assert len(blocks) == 2
+    t3 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    pool.audit([t3])
+    assert t3.blocks[:2] == blocks
+    pool.free(t3)
+    pool.audit([])
+
+
+def test_match_always_leaves_tail_to_recompute():
+    """Even a prompt whose every page is published matches at most
+    (S-1)//bt pages: the final prompt token must run through the model to
+    seed generation."""
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=4,
+                       states_per_domain=4, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(2, CFG.vocab, size=2 * bt)   # page-aligned
+    keys = pool.prefix_keys(prompt)
+    t1 = pool.reserve(0, len(prompt) + 4, first_tokens=len(prompt))
+    pool.register_prefix(t1, keys, 0, len(prompt), len(prompt))
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    assert len(blocks) == 1                    # not 2: the tail recomputes
+    pool.free(t1)
+    pool.audit([])
+
+
+def test_spill_restore_of_shared_pages():
+    """Spilling a table whose pages are refcount>1 copies the payload and
+    releases the refs; the restore is private; the survivor still matches."""
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=6,
+                       states_per_domain=6, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(2, CFG.vocab, size=2 * bt + 2)
+    keys = pool.prefix_keys(prompt)
+    t1 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt))
+    pool.register_prefix(t1, keys, 0, 2 * bt, len(prompt))
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    t2 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    t2.used_pages = len(t2.blocks)
+    pool.audit([t1, t2])
+    assert pool.spill(t2)
+    pool.audit([t1, t2])
+    assert pool.shared_pages() == 0            # refs released by the spill
+    assert pool.restore(t2)
+    pool.audit([t1, t2])
+    assert not set(t2.blocks[:2]) & set(t1.blocks[:2])   # private now
+    assert pool.match_prefix(0, keys,
+                             prompt_len=len(prompt))[0] == t1.blocks[:2]
+    pool.free(t1)
+    pool.free(t2)
+    pool.audit([])
+
+
+def test_migrate_privatizes_shared_table():
+    """Relayout/steal of a refcount>1 table: the cross-domain copy makes
+    the moved table private; the donor keeps its pages and index entry."""
+    pool = KVBlockPool(CFG, n_domains=2, max_len=32, blocks_per_domain=4,
+                       states_per_domain=4, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(2, CFG.vocab, size=bt + 2)
+    keys = pool.prefix_keys(prompt)
+    t1 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt))
+    pool.register_prefix(t1, keys, 0, bt, len(prompt))
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    t2 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    t2.used_pages = len(t2.blocks)
+    pool.audit([t1, t2])
+    assert pool.migrate(t2, 1)
+    pool.audit([t1, t2])
+    assert t2.domain == 1 and pool.shared_pages() == 0
+    assert pool.match_prefix(0, keys,
+                             prompt_len=len(prompt))[0] == t1.blocks[:1]
+    pool.free(t1)
+    pool.free(t2)
+    pool.audit([])
+
+
+def test_audit_catches_refcount_and_index_corruption():
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=4,
+                       states_per_domain=4, block_tokens=16)
+    t1 = pool.reserve(0, 20, first_tokens=20)
+    pool.audit([t1])
+    b = t1.blocks[0]
+    pool._ref[b] += 1
+    with pytest.raises(AssertionError):
+        pool.audit([t1])
+    pool._ref[b] -= 1
+    pool.audit([t1])
+    pool._entry_of_block[b] = b"bogus"
+    with pytest.raises(AssertionError):
+        pool.audit([t1])
+    del pool._entry_of_block[b]
+    pool.free(t1)
+    pool.audit([])
+
+
+# ---------------------------------------------------------------------------
+# the satellite bugfix: cached prompts admit at high occupancy
+# ---------------------------------------------------------------------------
+
+def test_fully_cached_prompt_admits_when_pool_is_tight():
+    """``reserve(first_tokens=)`` charges only the UNSHARED pages: a
+    prompt whose prefix is fully resident admits even when the domain has
+    just one free block left for the tail."""
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=3,
+                       states_per_domain=4, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(2, CFG.vocab, size=bt + 4)
+    keys = pool.prefix_keys(prompt)
+    t1 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt))
+    pool.register_prefix(t1, keys, 0, bt, len(prompt))
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    # 1 of 3 blocks free: an unshared 2-page first chunk cannot fit ...
+    assert pool.free_blocks(0) == 1
+    assert pool.reserve(0, len(prompt) + 8,
+                        first_tokens=len(prompt)) is None
+    # ... but the cached-prefix admission charges only the tail page
+    t2 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    assert t2 is not None and len(t2.blocks) == 2
+    pool.audit([t1, t2])
+    pool.free(t1)
+    pool.free(t2)
+    pool.audit([])
+
+
+def test_cached_attach_charges_the_free_list():
+    """CACHED prefix hits sit ON the free list, and attaching pulls them
+    off: a reservation whose unshared tail doesn't fit beyond them must
+    be refused cleanly — not drain the list and crash ``_pop_block``
+    (found by the open-loop benchmark under restart-eviction churn)."""
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32, blocks_per_domain=2,
+                       states_per_domain=4, block_tokens=16)
+    bt = pool.block_tokens
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(2, CFG.vocab, size=bt + 4)
+    keys = pool.prefix_keys(prompt)
+    t1 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt))
+    pool.register_prefix(t1, keys, 0, bt, len(prompt))
+    pool.free(t1)                       # both blocks free, one cached
+    t2 = pool.reserve(0, bt, first_tokens=bt)   # takes the UNCACHED one
+    blocks, _ = pool.match_prefix(0, keys, prompt_len=len(prompt))
+    assert len(blocks) == 1
+    # 1 free block == the cached hit itself: no room for the tail page
+    assert pool.free_blocks(0) == 1
+    assert pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                        prefix_blocks=blocks) is None
+    pool.audit([t2])
+    pool.free(t2)                       # tail fits now: same match admits
+    t3 = pool.reserve(0, len(prompt) + 8, first_tokens=len(prompt),
+                      prefix_blocks=blocks)
+    assert t3 is not None and t3.blocks[0] == blocks[0]
+    pool.audit([t3])
+    pool.free(t3)
+    pool.audit([])
+
+
+# ---------------------------------------------------------------------------
+# engine-level mechanisms
+# ---------------------------------------------------------------------------
+
+def test_second_wave_skips_prefill_and_matches_tokens():
+    """Wave 2 of a shared-preamble workload attaches the CACHED pages of
+    wave 1 and skips their prefill chunks; tokens match the unshared
+    engine exactly."""
+    rng = np.random.default_rng(5)
+    pre = rng.integers(2, CFG.vocab, size=32)
+    prompts = [np.concatenate([pre, rng.integers(2, CFG.vocab, size=7)])
+               for _ in range(4)]
+
+    eng = _engine(groups=1, max_batch=2, max_len=64, pool_streams=4)
+    _instrument(eng)
+    w1 = [eng.submit(p, 4) for p in prompts[:2]]
+    _drain(eng)
+    c0 = eng.counters.totals.get("prefill_chunks", 0)
+    w2 = [eng.submit(p, 4) for p in prompts[2:]]
+    _drain(eng)
+    s = eng.kv_stats()
+    # each wave-2 request matched both preamble pages (32 tokens)
+    assert s["prefill_tokens_skipped"] >= 2 * 32
+    assert s["prefix_hits"] >= 2
+    # wave 2 ran only tail chunks: 1 per request, not 3
+    assert eng.counters.totals["prefill_chunks"] - c0 <= 2
+    eng.pool.audit([])
+    assert eng.pool.occupancy() == 0.0
+
+    ref = _engine(groups=1, max_batch=2, max_len=64, pool_streams=4,
+                  share=False)
+    q = [ref.submit(p, 4) for p in prompts]
+    _drain(ref)
+    assert ([r.generated for r in w1 + w2]
+            == [r.generated for r in ref.submitted])
+    assert ref.kv_stats()["prefix_hits"] == 0
+
+
+def test_ring_wrap_cow_forks_keep_identity():
+    """Streams decoding past the ring width W wrap onto their shared
+    prefix pages: the write must CoW-fork them, and tokens stay identical
+    to the unshared engine."""
+    def run(share):
+        eng = _engine(groups=1, max_batch=2, max_len=64, pool_streams=4,
+                      share=share)
+        _instrument(eng)
+        W = eng.pool.pages_per_stream * eng.pool.block_tokens
+        rng = np.random.default_rng(6)
+        # one-page preamble: prefill never wraps (which would invalidate
+        # the published page); only the deep decode below wraps onto it
+        pre = rng.integers(2, CFG.vocab, size=eng.pool.block_tokens)
+        prompts = [np.concatenate([pre, rng.integers(2, CFG.vocab, size=3)])
+                   for _ in range(3)]
+        # decode far enough that pos crosses W: wrap writes land on page 0
+        max_new = W - len(prompts[0]) + eng.pool.block_tokens
+        eng.submit(prompts[0], 4)
+        _drain(eng)
+        for p in prompts[1:]:
+            eng.submit(p, max_new)
+        _drain(eng)
+        eng.pool.audit([])
+        assert eng.pool.occupancy() == 0.0
+        return [r.generated for r in eng.submitted], eng.kv_stats()
+
+    gen_on, s_on = run(True)
+    gen_off, s_off = run(False)
+    assert gen_on == gen_off
+    assert s_on["prefix_hits"] >= 2
+    assert s_on["cow_forks"] >= 1          # the wrap hit a shared page
+    assert s_off["cow_forks"] == 0
+
+
+def test_relayout_of_shared_tables_keeps_identity():
+    """Adaptive relayouts while refcount>1 tables are in flight (rebalance
+    copies privatize them) vs the non-adaptive run: identical tokens."""
+    from repro.core.controller import ControllerConfig
+    rng = np.random.default_rng(7)
+    prompts = _preamble_prompts(rng, 12, 16, 8)
+    max_new = [2 if i % 4 == 0 else 8 for i in range(12)]
+
+    def run(adaptive):
+        eng = _engine(groups=4, max_batch=1, max_len=48, pool_streams=4,
+                      adaptive=adaptive,
+                      controller=ControllerConfig(scheduler_timer=3,
+                                                  threshold=1.0,
+                                                  min_dwell=1))
+        _instrument(eng)
+        reqs = [eng.submit(p, m) for p, m in zip(prompts, max_new)]
+        res = _drain(eng)
+        eng.pool.audit([])
+        return [r.generated for r in reqs], res
+
+    gen_a, res_a = run(True)
+    assert len(res_a["relayouts"]) >= 1
+    gen_b, res_b = run(False)
+    assert res_b["relayouts"] == []
+    assert gen_a == gen_b
+
+
+def test_hybrid_state_checkpoint_enables_hits():
+    """recurrentgemma (ring + rgLRU state): a prefix hit needs a state
+    CHECKPOINT at the match boundary — position-dependent state cannot be
+    shared in place.  Wave 2 hits via the checkpoint and tokens match the
+    unshared engine.  The one-page preamble keeps the whole stream inside
+    the ring width (a wrap would invalidate the published page)."""
+    rng = np.random.default_rng(8)
+    pre = rng.integers(2, HYB.vocab, size=16)
+    prompts = [np.concatenate([pre, rng.integers(2, HYB.vocab, size=5)])
+               for _ in range(3)]
+
+    def run(share):
+        eng = _engine(HYB, groups=1, max_batch=2, max_len=64,
+                      pool_streams=4, share=share)
+        _instrument(eng)
+        eng.submit(prompts[0], 3)
+        _drain(eng)
+        for p in prompts[1:]:
+            eng.submit(p, 3)
+        _drain(eng)
+        eng.pool.audit([])
+        assert eng.pool.occupancy() == 0.0
+        return [r.generated for r in eng.submitted], eng.kv_stats()
+
+    gen_on, s_on = run(True)
+    gen_off, s_off = run(False)
+    assert gen_on == gen_off
+    assert s_on["prefix_hits"] >= 1
+    assert s_on["prefill_tokens_skipped"] > 0
+    assert s_off["prefix_hits"] == 0
+
+
+def test_oversubscribed_restart_converges_via_cached_prefixes():
+    """Deep oversubscription under restart eviction, where the prompts
+    need nearly the whole domain: the UNSHARED engine thrashes (the
+    baseline restart livelock — every re-admission recomputes the full
+    prompt and deadlocks again), while sharing lets each re-admission
+    attach the victim's own cached pages and skip straight past the
+    recomputation — the workload converges, token-identical to an
+    uncontended unshared run."""
+    rng = np.random.default_rng(9)
+    prompts = _preamble_prompts(rng, 6, 32, 8)
+    sched = [(1, p, 12) for p in prompts]
+
+    eng = _engine(groups=1, max_batch=2, max_len=64, pool_streams=1,
+                  share=True, evict_mode="restart", stall_evict_rounds=3)
+    _instrument(eng)
+    eng.open_loop_client(iter(list(sched)))
+    _drain(eng)
+    eng.pool.audit([])
+    assert eng.pool.occupancy() == 0.0
+    s = eng.kv_stats()
+    assert s["prefix_hits"] >= 1
+    assert s["evictions"] >= 1              # pressure actually fired
+
+    ref = _engine(groups=1, max_batch=2, max_len=64, pool_streams=4,
+                  share=False)
+    for _, p, m in sched:
+        ref.submit(p, m)
+    _drain(ref)
+    assert ([r.generated for r in eng.submitted]
+            == [r.generated for r in ref.submitted])
