@@ -193,6 +193,36 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
             + (kv_state_bytes(cfg) if with_state else 0.0))
 
 
+def spec_rejected_bytes(cfg: ModelConfig, rejected_tokens: int) -> float:
+    """HBM bytes the speculative verify forward moved for draft tokens
+    greedy acceptance then threw away — the honest cost of optimism.
+
+    Per rejected token: its activation row streamed through every layer
+    (read + write of a ``d_model`` bf16 vector per layer) plus the ring-KV
+    write the masked cache update committed before rollback restored the
+    page (``kv_token_bytes``).  Napkin bound like the rest of this module:
+    weights stream once per CHUNK regardless of width, so the marginal
+    token pays only its activation and cache traffic."""
+    act = 2.0 * cfg.d_model * len(cfg.layer_types()) * 2.0
+    return rejected_tokens * (act + kv_token_bytes(cfg))
+
+
+def spec_rollback_bytes(cfg: ModelConfig, ckpt_pages: int,
+                        restored_pages: int, block_tokens: int, *,
+                        ckpts: int = 0, rollbacks: int = 0) -> float:
+    """Host round-trip bytes the optimistic-commit rollback protocol pays:
+    every speculative tick snapshots its write-touched pages (+ state
+    slot) D2H (``ckpt_pages`` over ``ckpts`` checkpoints) and every
+    partial accept restores them H2D (``restored_pages`` over
+    ``rollbacks``), priced with the same per-page formula as the swap
+    tier."""
+    return (kv_spill_bytes(cfg, ckpt_pages, block_tokens, with_state=False)
+            + ckpts * kv_state_bytes(cfg)
+            + kv_spill_bytes(cfg, restored_pages, block_tokens,
+                             with_state=False)
+            + rollbacks * kv_state_bytes(cfg))
+
+
 def kv_dedup_bytes(cfg: ModelConfig, shared_extra_refs: int,
                    block_tokens: int) -> float:
     """Ring-cache bytes prefix sharing keeps OFF the device right now:

@@ -62,6 +62,14 @@ class StepSample:
     prefill_tokens_skipped: float = 0.0
     kv_shared_pages: float = 0.0
     kv_shared_bytes: float = 0.0
+    # Speculative decoding: draft tokens proposed / accepted by greedy
+    # verification and partial-accept rollbacks (deltas since the previous
+    # sample), plus the engine's running acceptance-rate gauge
+    # (accepted / drafted over the whole run so far).
+    spec_tokens_drafted: float = 0.0
+    spec_tokens_accepted: float = 0.0
+    spec_rollbacks: float = 0.0
+    spec_accept_rate: float = 0.0
 
 
 class PerfCounters:
@@ -99,7 +107,11 @@ class PerfCounters:
                     kv_prefix_hits: float = 0.0,
                     prefill_tokens_skipped: float = 0.0,
                     kv_shared_pages: float = 0.0,
-                    kv_shared_bytes: float = 0.0):
+                    kv_shared_bytes: float = 0.0,
+                    spec_tokens_drafted: float = 0.0,
+                    spec_tokens_accepted: float = 0.0,
+                    spec_rollbacks: float = 0.0,
+                    spec_accept_rate: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -115,7 +127,10 @@ class PerfCounters:
                                        mixed_tick_decode_rows_saved,
                                        kv_prefix_hits,
                                        prefill_tokens_skipped,
-                                       kv_shared_pages, kv_shared_bytes))
+                                       kv_shared_pages, kv_shared_bytes,
+                                       spec_tokens_drafted,
+                                       spec_tokens_accepted,
+                                       spec_rollbacks, spec_accept_rate))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

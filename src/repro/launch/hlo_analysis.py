@@ -134,6 +134,55 @@ def while_trip_counts(comps: Dict[str, List[Instruction]]) -> Dict[str, float]:
     return mult
 
 
+def while_loops(comps: Dict[str, List[Instruction]]) -> Dict[str, float]:
+    """body computation name -> that loop's OWN trip count (no enclosing
+    multipliers; see ``while_trip_counts`` for the propagated product)."""
+    loops: Dict[str, float] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.op != "while":
+                continue
+            bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            if not (bm and cm):
+                continue
+            best = None
+            for ci in comps.get(cm.group(1), []):
+                if ci.op == "constant":
+                    m = re.search(r"constant\((-?\d+)\)", ci.line)
+                    if m and int(m.group(1)) > 0:
+                        v = int(m.group(1))
+                        best = v if best is None else max(best, v)
+            loops[bm.group(1)] = float(best) if best else 1.0
+    return loops
+
+
+def model_steps_per_call(hlo: str, layer_trips) -> float:
+    """Sequential MODEL steps one call of a compiled serve step executes,
+    measured from the optimized HLO rather than assumed structurally.
+
+    A "model step" is one trip through the per-layer scan, so the layer
+    loop is the probe: find the while loop whose own trip count matches a
+    known layer-scan length (``layer_trips`` — n_layers, hybrid n_groups,
+    or enc-dec dec_layers) and divide its PROPAGATED multiplier by that
+    trip.  A fused chunk step leaves the layer loop at top level
+    (multiplier == trip -> 1 step); the scan-mode reference nests it in a
+    C-trip token loop (multiplier == C * trip -> C steps).  If XLA
+    unrolled the layer scan entirely, fall back to the deepest surviving
+    loop's multiplier (a remaining token loop still reports its C; a
+    fully unrolled program is 1 step).  This is what makes the
+    accepted-tokens-per-model-step metric MEASURED: a "fused" path that
+    actually compiled to a token loop shows its real step count here."""
+    comps = parse_computations(hlo)
+    mult = while_trip_counts(comps)
+    loops = while_loops(comps)
+    probe = set(float(t) for t in layer_trips)
+    cands = [mult.get(b, 1.0) / t for b, t in loops.items() if t in probe]
+    if cands:
+        return max(cands)
+    return max((mult.get(b, 1.0) for b in loops), default=1.0)
+
+
 # ---------------------------------------------------------------------------
 # Replica-group parsing + link classification
 # ---------------------------------------------------------------------------

@@ -330,6 +330,36 @@ def make_serve_chunk_step(cfg: ModelConfig, spec, gather_specs=None,
     return serve_chunk_step
 
 
+def make_spec_verify_step(cfg: ModelConfig, spec, gather_specs=None,
+                          mode: str = "scan", chunk_kernel: str = "dense"):
+    """(params, cache, tokens (B,C), pos, n_tokens[, extras]) ->
+    (per-position logits (B, C, V), cache').  The speculative-decode
+    VERIFY step: same masked chunk forward as ``make_serve_chunk_step``
+    (same ``mode`` / ``chunk_kernel`` contract) but it returns the logits
+    after EVERY fed token, not just the last active one — the engine
+    compares each draft token against the argmax one position earlier and
+    keeps the longest matching prefix, so greedy output is token-identical
+    to non-speculative decoding by construction.  Positions at or past
+    ``n_tokens[i]`` come back NEG_INF-poisoned; the host must still gate
+    on its own lengths before trusting an argmax."""
+    if mode not in ("scan", "parallel"):
+        raise ValueError(f"unknown chunk-step mode {mode!r}")
+    if chunk_kernel not in ("dense", "blocked"):
+        raise ValueError(f"unknown chunk kernel {chunk_kernel!r}")
+
+    def spec_verify_step(params, cache, tokens, pos, n_tokens, extras=None):
+        if mode == "parallel":
+            return dec.prefill_chunk_step(params, cfg, spec, cache, tokens,
+                                          pos, n_tokens, extras,
+                                          gather_specs=gather_specs,
+                                          chunk_kernel=chunk_kernel,
+                                          all_logits=True)
+        return dec.chunk_decode_step(params, cfg, spec, cache, tokens, pos,
+                                     n_tokens, extras, all_logits=True)
+
+    return spec_verify_step
+
+
 def make_spill_gather(spec):
     """(storage, blocks, state_slot) -> host leaf list.  The device->host
     half of a swap-tier KV spill: DMAs exactly a stream's used pages (and

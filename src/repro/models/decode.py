@@ -229,7 +229,19 @@ def scatter_cache_view(pool, spec: CacheViewSpec, tables, state_slots, view):
 def copy_pool_entries(pool, spec: CacheViewSpec, src_blocks, dst_blocks,
                       src_state=None, dst_state=None):
     """Copy physical pages (and optionally a state slot) inside the pool —
-    the device-side half of a cross-domain block migration."""
+    the device-side half of a cross-domain block migration.
+
+    The block lists are padded to a pow-2 bucket with null-block
+    self-copies (block 0 -> block 0, bit-identical values, so duplicate
+    scatter indices are exact regardless of write order): migrations and
+    prefix forks copy arbitrary page counts, and an unbucketed gather/
+    scatter dispatches a fresh XLA module per distinct count."""
+    src_blocks, dst_blocks = list(src_blocks), list(dst_blocks)
+    if src_blocks:
+        bucket = 1 << (len(src_blocks) - 1).bit_length()
+        pad = bucket - len(src_blocks)
+        src_blocks = src_blocks + [0] * pad
+        dst_blocks = dst_blocks + [0] * pad
     src_b = jnp.asarray(src_blocks, jnp.int32)
     dst_b = jnp.asarray(dst_blocks, jnp.int32)
     out = []
@@ -354,7 +366,7 @@ def next_token_ids(logits, n_tokens):
 
 
 def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
-                      tokens, pos, n_tokens, extras=None):
+                      tokens, pos, n_tokens, extras=None, all_logits=False):
     """One continuous-batching tick: every stream consumes UP TO C tokens.
 
     tokens: (B, C) int32 — stream i's next ``n_tokens[i]`` tokens (prefill
@@ -370,7 +382,10 @@ def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
     REFERENCE path: C sequential model steps per tick.  The fused
     ``prefill_chunk_step`` computes the same chunk in one forward.
     Returns (logits (B, V) after each stream's LAST active token, new
-    cache).
+    cache).  With ``all_logits=True`` (speculative verification) returns
+    the PER-POSITION logits (B, C, V) instead — row [i, t] is the
+    distribution after stream i consumed tokens[i, t], positions at or
+    past ``n_tokens[i]`` poisoned to NEG_INF.
     """
     B, C = tokens.shape
     logits0 = jnp.full((B, cfg.vocab), L.NEG_INF, jnp.float32)
@@ -383,10 +398,14 @@ def chunk_decode_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
         cache = select_streams(spec, active, new_cache, cache)
         logits = jnp.where(active[:, None], lg, logits)
         pos_c = pos_c + active.astype(pos_c.dtype)
-        return (cache, pos_c, logits), None
+        return (cache, pos_c, logits), (lg if all_logits else None)
 
-    (cache, _, logits), _ = lax.scan(
+    (cache, _, logits), ys = lax.scan(
         body, (cache, pos, logits0), jnp.arange(C))
+    if all_logits:
+        la = jnp.transpose(ys, (1, 0, 2))                      # (B, C, V)
+        active = jnp.arange(C)[None, :] < jnp.asarray(n_tokens)[:, None]
+        return jnp.where(active[:, :, None], la, L.NEG_INF), cache
     return logits, cache
 
 
@@ -585,7 +604,7 @@ def _chunk_layer(x, lp, lc, cfg: ModelConfig, lt: str, rope1, pos, n_tokens,
 
 def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
                        tokens, pos, n_tokens, extras=None, gather_specs=None,
-                       chunk_kernel="dense"):
+                       chunk_kernel="dense", all_logits=False):
     """One continuous-batching tick as ONE fused multi-token forward.
 
     Same contract as ``chunk_decode_step`` (tokens (B, C), pos (B,),
@@ -610,6 +629,13 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
     idle slot can never emit a token.  Chunks wider than the ring are
     supported: attention masks each query to its surviving span and the
     ring write keeps the last W active tokens (last-write-wins).
+
+    With ``all_logits=True`` (speculative verification) returns the
+    PER-POSITION logits (B, C, V): row [i, t] is the distribution after
+    stream i's token t — the intra-chunk causal mask makes it independent
+    of every later token in the chunk, which is what lets greedy
+    acceptance keep a verified prefix and discard the rest.  Positions at
+    or past ``n_tokens[i]`` are poisoned to NEG_INF.
     """
     from repro.models.transformer import _wsc_tree
     extras = extras or {}
@@ -696,6 +722,11 @@ def prefill_chunk_step(params, cfg: ModelConfig, spec: CacheViewSpec, cache,
         new_cache = {"layers": new_layers}
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if all_logits:
+        la = head_logits(params, cfg, x.reshape(B * C, x.shape[-1]))
+        la = la.reshape(B, C, -1)
+        active = jnp.arange(C)[None, :] < n_tokens[:, None]
+        return jnp.where(active[:, :, None], la, L.NEG_INF), new_cache
     last = jnp.clip(n_tokens - 1, 0, C - 1)
     xl = jnp.take_along_axis(
         x, jnp.broadcast_to(last[:, None, None], (B, 1, x.shape[-1])),

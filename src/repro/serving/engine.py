@@ -105,10 +105,11 @@ from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
 from repro.core.costmodel import prefill_chunk_bytes, \
-    prefill_chunk_score_bytes
+    prefill_chunk_score_bytes, spec_rejected_bytes, spec_rollback_bytes
 from repro.launch.steps import make_prefill, make_serve_chunk_step, \
-    make_serve_step
+    make_serve_step, make_spec_verify_step
 from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
+from repro.serving.spec import make_drafter
 
 
 @dataclasses.dataclass
@@ -200,6 +201,24 @@ class EngineConfig:
                                        # copy-on-write at ring-wrap.  Only
                                        # active on the lazy paged path for
                                        # models with ring pages
+    spec_decode: str = "off"           # speculative decoding: "ngram"
+                                       # drafts up to spec_k tokens per
+                                       # decode tick from the stream's own
+                                       # committed tokens and verifies them
+                                       # in ONE fused chunk forward (greedy
+                                       # acceptance -> token-identical to
+                                       # "off" by construction).  Lazy
+                                       # paged path only; deliberately off
+                                       # by default so the non-speculative
+                                       # counter gates keep their exact
+                                       # baselines — flip per run/workload
+    spec_k: int = 4                    # max draft tokens per tick
+    spec_ngram: int = 3                # longest n-gram the prompt-lookup
+                                       # drafter matches on
+    cached_retention: str = "access"   # cached prefix-page reclaim order:
+                                       # "access" evicts the coldest page
+                                       # by last-hit recency, "blind" the
+                                       # PR-7 free-list order
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -305,6 +324,8 @@ class ServeEngine:
             raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
         if ecfg.chunk_kernel not in ("blocked", "dense"):
             raise ValueError(f"unknown chunk_kernel {ecfg.chunk_kernel!r}")
+        if ecfg.spec_decode not in ("off", "ngram"):
+            raise ValueError(f"unknown spec_decode {ecfg.spec_decode!r}")
         self._prefill_mode = ecfg.prefill_mode if self._lazy else "scan"
         self._chunk_kernel = (ecfg.chunk_kernel
                               if self._prefill_mode == "parallel" else "dense")
@@ -319,7 +340,7 @@ class ServeEngine:
             self.pool = KVBlockPool(
                 cfg, n_domains=topology.total_groups, max_len=ecfg.max_len,
                 block_tokens=ecfg.block_tokens, counters=self.counters,
-                **budget)
+                retention=ecfg.cached_retention, **budget)
             self.waiters = WaitQueue(self.runtime)
             # wake ONE waiter per free: grants stay FIFO (a successful
             # admission cascades the wake to the next waiter itself)
@@ -349,10 +370,28 @@ class ServeEngine:
                 self._paged_chunk = jax.jit(
                     self._make_paged_chunk(self._prefill_mode),
                     donate_argnums=(1,))
+            # speculative decoding rides the lazy chunk path: drafted
+            # decode streams become small-chunk rows verified through an
+            # all-position-logits variant of the same fused forward
+            self._spec = self._lazy and ecfg.spec_decode != "off" \
+                and ecfg.spec_k > 0 and self._chunk > 1
+            if self._spec:
+                self.drafter = make_drafter(ecfg.spec_decode,
+                                            ngram=ecfg.spec_ngram)
+                # pure-spec ticks run at this narrow width; ticks that
+                # also carry a prefill chunk reuse the full chunk width
+                self._spec_w = min(ecfg.spec_k + 1, self._chunk)
+                self._paged_spec = jax.jit(
+                    self._make_paged_spec(self._prefill_mode),
+                    donate_argnums=(1,))
+            else:
+                self.drafter = None
         else:
             self._kv_fn = None
             self._chunk = 1
             self._share = False
+            self._spec = False
+            self.drafter = None
         self._build_groups()
         self.sched.register_relayout(self._relayout)
 
@@ -637,6 +676,27 @@ class ServeEngine:
             return logits, storage
 
         return paged_chunk
+
+    def _make_paged_spec(self, mode: str = "scan"):
+        """The speculative VERIFY step: same gather -> masked chunk forward
+        -> scatter as ``_make_paged_chunk`` but returning the logits after
+        EVERY fed token (B, C, V), so greedy acceptance can compare each
+        draft against the argmax one position earlier.  The cache commits
+        optimistically; the host rolls back rejected suffixes from the
+        pool's page checkpoints."""
+        spec = self.pool.spec
+        step = make_spec_verify_step(self.cfg, spec, mode=mode,
+                                     chunk_kernel=self._chunk_kernel)
+
+        def paged_spec(params, storage, tables, state_slots, tokens, pos,
+                       n_tokens):
+            view = dec.gather_cache_view(storage, spec, tables, state_slots)
+            logits, view = step(params, view, tokens, pos, n_tokens)
+            storage = dec.scatter_cache_view(storage, spec, tables,
+                                             state_slots, view)
+            return logits, storage
+
+        return paged_spec
 
     def _make_commit_prefill(self):
         spec = self.pool.spec
@@ -1012,15 +1072,108 @@ class ServeEngine:
         self.counters.add("decode_gather_null_rows", Bd - len(deco_rows))
         return nxt
 
+    def _draft_for(self, req: Request, pos: int) -> List[int]:
+        """Up to spec_k draft tokens for a DECODE stream — empty during
+        prefill, near max_new (the verify chunk's free boundary token must
+        never overrun the budget), or when the drafter has nothing.
+        Proposals are sanitized (in-vocab prefix) but never trusted: the
+        verify forward is the only thing that commits tokens."""
+        S = len(req.prompt)
+        if pos < S:
+            return []
+        k = min(self.ecfg.spec_k, self._spec_w - 1,
+                req.max_new - len(req.generated) - 1)
+        if k <= 0:
+            return []
+        out: List[int] = []
+        for t in self.drafter.draft(req, k)[:k]:
+            t = int(t)
+            if not 0 <= t < self.cfg.vocab:
+                break
+            out.append(t)
+        return out
+
+    def _spec_verify(self, g: _Group, toks, n_h,
+                     drafts: Dict[int, List[int]]) -> Dict[int, np.ndarray]:
+        """The verify half: ONE all-position-logits fused chunk forward
+        over the drafted rows, compacted into their own pow-2 bucket at
+        the narrow spec width (drafted rows never share a compiled program
+        with prefill chunks or plain decode rows, so those paths stay
+        bit-identical to the spec-off engine).  The cache commits
+        optimistically; rejected suffixes roll back from the page
+        checkpoints.  Returns row -> (n_i, V) logits."""
+        rows = sorted(drafts)
+        W = self._spec_w
+        P = self.pool.pages_per_stream
+        Bs = 1
+        while Bs < len(rows):
+            Bs *= 2
+        Bs = min(Bs, self.ecfg.max_batch)
+        rs = rows + [None] * (Bs - len(rows))
+        trows, srows = zip(*(self._table_row(g.slots[i])
+                             if i is not None else self._table_row(None)
+                             for i in rs))
+        toks_s = np.zeros((Bs, W), np.int32)
+        pos_s = np.zeros((Bs,), np.int32)
+        n_s = np.zeros((Bs,), np.int32)
+        for j, i in enumerate(rows):
+            n = int(n_h[i])
+            toks_s[j, :n] = toks[i, :n]
+            pos_s[j] = g.pos_h[i]
+            n_s[j] = n
+        lg, self.pool.storage = self._paged_spec(
+            self.params, self.pool.storage,
+            jnp.asarray(np.asarray(trows, np.int32).reshape(Bs, P)),
+            jnp.asarray(np.asarray(srows, np.int32)),
+            jnp.asarray(toks_s), jnp.asarray(pos_s), jnp.asarray(n_s))
+        lg = np.asarray(lg)
+        self.counters.add("spec_verify_forwards", 1)
+        self.counters.add("spec_row_forwards", len(rows))
+        return {i: lg[j, :int(n_h[i])] for j, i in enumerate(rows)}
+
+    def _spec_reapply(self, g: _Group, toks,
+                      rows: List[Tuple[int, int]]):
+        """Re-apply the ACCEPTED prefix of each rolled-back draft row with
+        one masked chunk forward from the restored pre-verify state
+        (logits discarded — the verify pass already fixed the committed
+        tokens).  Causal masking makes this bit-equivalent to having fed
+        only those tokens in the first place."""
+        W = self._spec_w
+        P = self.pool.pages_per_stream
+        Br = 1
+        while Br < len(rows):
+            Br *= 2
+        Br = min(Br, self.ecfg.max_batch)
+        rs = rows + [(None, 0)] * (Br - len(rows))
+        trows, srows = zip(*(self._table_row(g.slots[i])
+                             if i is not None else self._table_row(None)
+                             for i, _ in rs))
+        toks_r = np.zeros((Br, W), np.int32)
+        pos_r = np.zeros((Br,), np.int32)
+        n_r = np.zeros((Br,), np.int32)
+        for j, (i, nc) in enumerate(rows):
+            toks_r[j, :nc] = toks[i, :nc]
+            pos_r[j] = g.pos_h[i]
+            n_r[j] = nc
+        _, self.pool.storage = self._paged_chunk(
+            self.params, self.pool.storage,
+            jnp.asarray(np.asarray(trows, np.int32).reshape(Br, P)),
+            jnp.asarray(np.asarray(srows, np.int32)),
+            jnp.asarray(toks_r), jnp.asarray(pos_r), jnp.asarray(n_r))
+        self.counters.add("spec_reapply_forwards", 1)
+        self.counters.add("spec_row_reapplies", len(rows))
+
     def _decode_tick(self, g: _Group):
         """ONE batched model step for the group: every occupied slot
         consumes its next tokens — a page-sized prompt chunk for streams
-        still in prefill, the last generated token for decode streams.
-        Lazy tables grow (or park their stream) before the step commits
-        any bytes."""
+        still in prefill, the last generated token (plus up to spec_k
+        drafted tokens when speculative decoding is on) for decode
+        streams.  Lazy tables grow (or park their stream) before the step
+        commits any bytes."""
         B = self.ecfg.max_batch
         n_h = np.zeros((B,), np.int32)
         chunked = False
+        drafts: Dict[int, List[int]] = {}
         for i in range(B):
             req = g.slots[i]
             if req is None:
@@ -1028,23 +1181,47 @@ class ServeEngine:
             pos = int(g.pos_h[i])
             if req.table is not None and self.ecfg.paged:
                 n, need = self._next_chunk_need(req, pos)
+                d = self._draft_for(req, pos) if self._spec else []
+                if d:
+                    # a drafted decode stream writes 1 + k positions this
+                    # tick: growth and CoW must cover the full draft width
+                    # BEFORE the optimistic verify forward touches pages
+                    n = 1 + len(d)
+                    need = (self.pool.pages_needed(pos + n)
+                            - len(req.table.blocks))
                 forks = (self.pool.fork_pages(req.table, pos, n)
                          if self._share else [])
-                if (self._lazy and self.pool.pages_per_stream
-                        and (need > 0 or forks)
-                        and not self._grow_stream(req, g, max(need, 0),
-                                                  tuple(forks))):
+                grown = not (self._lazy and self.pool.pages_per_stream
+                             and (need > 0 or forks)) \
+                    or self._grow_stream(req, g, max(need, 0), tuple(forks))
+                if not grown and d:
+                    # speculation is opportunistic: under memory pressure
+                    # drop the draft and retry as a plain decode, so spec
+                    # never parks a stream the non-speculative engine
+                    # would have run this tick
+                    d = []
+                    n, need = self._next_chunk_need(req, pos)
+                    forks = (self.pool.fork_pages(req.table, pos, n)
+                             if self._share else [])
+                    grown = not (need > 0 or forks) or self._grow_stream(
+                        req, g, max(need, 0), tuple(forks))
+                if not grown:
                     self._park_stream(g, i)
                     continue
                 if self._share:
                     # writing into a published page forks the page's index
                     # entry off it (the OLD block keeps its entry)
                     self.pool.note_writes(req.table, pos, n)
+                if d:
+                    drafts[i] = d
             else:
                 S = len(req.prompt)
                 n = min(self._chunk, S - pos) if pos < S else 1
             n_h[i] = n
-            chunked = chunked or n > 1
+            # drafted rows run their OWN verify half; "chunked" tracks
+            # only real prefill chunks so the spec-off paths (and their
+            # counters) stay byte-for-byte unchanged
+            chunked = chunked or (n > 1 and i not in drafts)
         if not n_h.any():
             return
         if self.ecfg.paged:
@@ -1052,8 +1229,8 @@ class ServeEngine:
         pos_j = jnp.asarray(g.pos_h)
         # per-stream token feed: the next prompt slice for streams still in
         # prefill (a final chunk may hold a single token), the last emitted
-        # token for decode streams
-        C = self._chunk if chunked else 1
+        # token — plus its draft continuation — for decode streams
+        C = self._chunk if chunked else (self._spec_w if drafts else 1)
         toks = np.zeros((B, C), np.int32)
         for i in range(B):
             req = g.slots[i]
@@ -1064,7 +1241,17 @@ class ServeEngine:
                 toks[i, :n_h[i]] = req.prompt[pos:pos + n_h[i]]
             else:
                 toks[i, 0] = g.tok_h[i]
-        deco_rows = [i for i in range(B) if n_h[i] == 1]
+                d = drafts.get(i)
+                if d:
+                    toks[i, 1:1 + len(d)] = d
+        # drafted rows are carved out of the regular paths (n_eff = 0:
+        # gathered but never computed or written) — they run through the
+        # dedicated verify half below, so prefill chunks and plain decode
+        # rows execute the EXACT compiled programs the spec-off engine runs
+        n_eff = n_h.copy()
+        for i in drafts:
+            n_eff[i] = 0
+        deco_rows = [i for i in range(B) if n_eff[i] == 1]
         if chunked:
             # model-step accounting, STRUCTURAL (by construction of the
             # compiled path, not measured at runtime): the fused path is
@@ -1076,7 +1263,7 @@ class ServeEngine:
                 "prefill_model_steps",
                 1 if self._prefill_mode == "parallel" else C)
             if self.ecfg.split_ticks and deco_rows:
-                nxt = self._split_tick(g, n_h, toks, C, deco_rows)
+                nxt = self._split_tick(g, n_eff, toks, C, deco_rows)
             else:
                 if deco_rows:
                     # single-token streams ride the C-wide step: C-1 of
@@ -1085,12 +1272,29 @@ class ServeEngine:
                                       (C - 1) * len(deco_rows))
                 logits, self.pool.storage = self._paged_chunk(
                     self.params, self.pool.storage, tables, slots1,
-                    jnp.asarray(toks), pos_j, jnp.asarray(n_h))
+                    jnp.asarray(toks), pos_j, jnp.asarray(n_eff))
                 nxt = np.asarray(dec.next_token_ids(logits,
-                                                    jnp.asarray(n_h)))
-        else:
-            tokens = jnp.asarray(toks)
+                                                    jnp.asarray(n_eff)))
+        elif deco_rows:
+            tokens = jnp.asarray(toks[:, :1])
             if self.ecfg.paged:
+                if drafts:
+                    # the single-token step has NO per-row length mask, so
+                    # a drafted row riding it would write its ring page
+                    # AND advance its recurrent state a second time before
+                    # the verify half runs.  Point drafted rows at the
+                    # null table/state row instead (reserved id 0 —
+                    # written but never read, the same convention idle
+                    # slots and bucket padding use); their logits are
+                    # already masked to the -1 sentinel via n_eff.
+                    P = self.pool.pages_per_stream
+                    rowlist, slotlist = zip(
+                        *(self._table_row(None) if i in drafts
+                          else self._table_row(g.slots[i])
+                          for i in range(B)))
+                    tables = jnp.asarray(
+                        np.asarray(rowlist, np.int32).reshape(B, P))
+                    slots1 = jnp.asarray(np.asarray(slotlist, np.int32))
                 logits, self.pool.storage = self._paged_decode(
                     self.params, self.pool.storage, tables, slots1,
                     tokens, pos_j)
@@ -1099,7 +1303,74 @@ class ServeEngine:
                                                pos_j)
             # idle-slot hardening: slots with n == 0 get the -1 sentinel,
             # never an argmax over a constant (all-zero / all-NEG_INF) row
-            nxt = np.asarray(dec.next_token_ids(logits, jnp.asarray(n_h)))
+            nxt = np.asarray(dec.next_token_ids(logits, jnp.asarray(n_eff)))
+        else:
+            nxt = np.full((B,), -1, np.int32)   # pure-spec tick
+        if deco_rows:
+            self.counters.add("decode_row_forwards", sum(
+                1 for i in deco_rows
+                if int(g.pos_h[i]) >= len(g.slots[i].prompt)))
+            if not chunked or self.ecfg.split_ticks:
+                self.counters.add("decode_forwards", 1)
+        # -- speculative verify half: one all-logits fused forward over the
+        # drafted rows, then greedy acceptance with checkpoint rollback
+        commits: Dict[int, List[int]] = {}
+        if drafts:
+            self.counters.add("spec_ticks", 1)
+            # Rollback needs, per row.  While the write window stays below
+            # the ring width, rejected-suffix KV PAGE writes are dead
+            # weight, never wrong: position -> ring slot is injective
+            # there, the suffix sits at or past the committed cursor, and
+            # every read (attention gather, prefix match, spill) is
+            # cursor-masked, so the stale bytes are overwritten before any
+            # read can see them.  Once ``pos + n`` crosses the ring width
+            # (local-attention models whose window is narrower than
+            # max_len) a rejected write at position p lands on slot
+            # p % W and DESTROYS the still-live position p - W, so the
+            # touched pages must be snapshotted.  Recurrent STATE always
+            # needs its snapshot: the slot holds the reduction over ALL n
+            # fed tokens and cannot be recomputed from pages.  A partial
+            # accept restores the snapshot and re-applies the accepted
+            # prefix to advance it.
+            ring_w = self.pool.spec.width if self.pool.pages_per_stream \
+                else 0
+            snaps = {}
+            for i in sorted(drafts):
+                p0, nn = int(g.pos_h[i]), int(n_h[i])
+                wraps = bool(ring_w) and p0 + nn > ring_w
+                if self.pool.has_state or wraps:
+                    snaps[i] = self.pool.checkpoint_pages(
+                        g.slots[i].table, p0, nn, pages=wraps)
+            spec_lg = self._spec_verify(g, toks, n_h, drafts)
+            reapply: List[Tuple[int, int]] = []
+            for i in sorted(drafts):
+                n = int(n_h[i])
+                am = np.argmax(spec_lg[i], axis=-1)
+                # accept the longest prefix where each draft token matches
+                # the verified argmax one position earlier; the token at
+                # the accept boundary comes free (full accept: k+1 tokens)
+                m = 0
+                while m < n - 1 and int(toks[i, m + 1]) == int(am[m]):
+                    m += 1
+                commits[i] = [int(x) for x in am[:m + 1]]
+                self.counters.add("spec_tokens_drafted", n - 1)
+                self.counters.add("spec_tokens_accepted", m)
+                if m + 1 < n:
+                    self.counters.add("spec_rollbacks", 1)
+                    if m == 0:
+                        self.counters.add("spec_full_rejects", 1)
+                    if i in snaps:
+                        self.pool.rollback_pages(g.slots[i].table,
+                                                 snaps[i])
+                        reapply.append((i, m + 1))
+            if reapply:
+                self._spec_reapply(g, toks, reapply)
+            drafted = self.counters.totals.get("spec_tokens_drafted", 0.0)
+            if drafted:
+                self.counters.set(
+                    "spec_accept_rate",
+                    self.counters.totals.get("spec_tokens_accepted", 0.0)
+                    / drafted)
         g.steps += 1
         now = self._clock()
         for i in range(B):
@@ -1108,9 +1379,33 @@ class ServeEngine:
                 continue
             S = len(req.prompt)
             pos0 = int(g.pos_h[i])
+            if i in commits:
+                # a drafted decode row commits its verified tokens: the
+                # accepted draft prefix plus the free boundary token.  The
+                # cursor lands on the last ACCEPTED position — a park or
+                # spill next tick saves exactly this state
+                out = commits[i]
+                g.pos_h[i] = pos0 + len(out)
+                self.counters.add("tokens_processed", len(out))
+                self.counters.add("decode_committed_tokens", len(out))
+                for tok in out:
+                    assert tok >= 0, f"spec slot {i} emitted a sentinel"
+                    req.generated.append(tok)
+                g.tok_h[i] = out[-1]
+                req.table.used_pages = min(
+                    len(req.table.blocks),
+                    self.pool.pages_needed(pos0 + len(out)))
+                if len(req.generated) >= req.max_new:
+                    req.t_done = now
+                    g.slots[i] = None
+                    self._inflight -= 1
+                    self.pool.free(req.table)  # wakes parked streams
+                continue
             new_pos = pos0 + int(n_h[i])
             g.pos_h[i] = new_pos
             self.counters.add("tokens_processed", int(n_h[i]))
+            if pos0 >= S:
+                self.counters.add("decode_committed_tokens", 1)
             if pos0 < S:
                 self.counters.add("prefill_chunks", 1)
                 if self.ecfg.paged:
@@ -1166,7 +1461,9 @@ class ServeEngine:
                  "kv_mid_decode_parks", "prefill_chunks",
                  "kv_spilled_pages", "kv_restores", "recompute_tokens",
                  "mixed_tick_decode_rows_saved",
-                 "kv_prefix_hits", "prefill_tokens_skipped")
+                 "kv_prefix_hits", "prefill_tokens_skipped",
+                 "spec_tokens_drafted", "spec_tokens_accepted",
+                 "spec_rollbacks")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -1178,7 +1475,9 @@ class ServeEngine:
                    "kv_parks": cur["kv_alloc_failures"]
                    - state["kv_alloc_failures"],
                    "kv_shared_pages": float(self.pool.shared_pages()),
-                   "kv_shared_bytes": self.pool.shared_bytes()}
+                   "kv_shared_bytes": self.pool.shared_bytes(),
+                   "spec_accept_rate": self.counters.totals.get(
+                       "spec_accept_rate", 0.0)}
             for n in names[1:]:
                 out[n] = cur[n] - state[n]
             state.update(t=t1, **cur)
@@ -1205,6 +1504,109 @@ class ServeEngine:
         if self.pool is not None:
             out["kv"] = self.kv_stats()
         return out
+
+    # -- measured model steps (compiled HLO, not structural) -----------------
+    def _layer_trips(self) -> Tuple[int, ...]:
+        """Trip counts a per-layer scan can compile to for this model —
+        the probe ``hlo_analysis.model_steps_per_call`` matches while
+        loops against."""
+        if self.cfg.block_pattern:
+            from repro.models.params import hybrid_structure
+            _, n_groups, _ = hybrid_structure(self.cfg)
+            return (n_groups,)
+        if self.cfg.family == "encdec":
+            return (self.cfg.dec_layers,)
+        return (self.cfg.n_layers,)
+
+    def measured_model_steps(self, kind: str = "chunk", *,
+                             C: Optional[int] = None, B: int = 1) -> float:
+        """Sequential model steps ONE call of a compiled paged step runs,
+        counted from its optimized HLO (while-loop trip counts) instead of
+        assumed from the path's construction — the PR-5 leftover that
+        makes accepted-tokens-per-model-step a measured number.  ``kind``
+        is "decode" (single-token step), "chunk" (the mixed chunk step) or
+        "spec" (the all-logits verify step); ``C`` the chunk width to
+        compile at (defaults to the engine's own width for the kind)."""
+        from repro.launch.hlo_analysis import model_steps_per_call
+        if self.pool is None:
+            raise ValueError("measured_model_steps needs the paged path")
+        P = self.pool.pages_per_stream
+        sd = jax.ShapeDtypeStruct
+        storage = jax.tree.map(lambda a: sd(a.shape, a.dtype),
+                               self.pool.storage)
+        tables = sd((B, P), jnp.int32)
+        slots = sd((B,), jnp.int32)
+        pos = sd((B,), jnp.int32)
+        if kind == "decode":
+            fn = self._paged_decode
+            args = (self.params, storage, tables, slots,
+                    sd((B, 1), jnp.int32), pos)
+        elif kind in ("chunk", "spec"):
+            if kind == "spec" and not self._spec:
+                raise ValueError("spec step not built: spec_decode is off")
+            fn = self._paged_chunk if kind == "chunk" else self._paged_spec
+            W = C or (self._chunk if kind == "chunk" else self._spec_w)
+            args = (self.params, storage, tables, slots,
+                    sd((B, W), jnp.int32), pos, sd((B,), jnp.int32))
+        else:
+            raise ValueError(f"unknown step kind {kind!r}")
+        hlo = fn.lower(*args).compile().as_text()
+        return model_steps_per_call(hlo, self._layer_trips())
+
+    def warm_steps(self, chunks: Tuple[int, ...] = (4, 8, 16)) -> int:
+        """Trace + compile every paged step the serve loop can dispatch —
+        decode, the chunk widths in ``chunks`` (clamped to the engine's
+        chunk size) and, when speculative decoding is on, the verify and
+        reapply widths — at every pow-2 batch bucket up to ``max_batch``.
+
+        Each warm call drives the REAL dispatch partials (the AOT
+        ``lower().compile()`` path keeps its own cache, so it cannot
+        pre-pay dispatch-side compiles) with all-null rows: tables point
+        at reserved block 0 and state slot 0, whose contents are written
+        but never read, and chunk rows carry n_tokens=0 so live caches
+        pass through bit-unchanged.  Serving after a warm-up therefore
+        never stalls a request on an XLA backend compile.  Returns the
+        number of step calls made."""
+        if self.pool is None:
+            return 0
+        P = self.pool.pages_per_stream
+        calls = 0
+        widths = sorted({min(c, self._chunk) for c in chunks}
+                        | ({self._spec_w} if self._spec else set()))
+        B = 1
+        while B <= self.ecfg.max_batch:
+            tables = jnp.asarray(np.zeros((B, P), np.int32))
+            slots = jnp.asarray(np.zeros((B,), np.int32))
+            pos = jnp.asarray(np.zeros((B,), np.int32))
+            _, self.pool.storage = self._paged_decode(
+                self.params, self.pool.storage, tables, slots,
+                jnp.asarray(np.zeros((B, 1), np.int32)), pos)
+            calls += 1
+            for W in widths:
+                toks = jnp.asarray(np.zeros((B, W), np.int32))
+                n = jnp.asarray(np.zeros((B,), np.int32))
+                _, self.pool.storage = self._paged_chunk(
+                    self.params, self.pool.storage, tables, slots,
+                    toks, pos, n)
+                calls += 1
+                if self._spec and W == self._spec_w:
+                    _, self.pool.storage = self._paged_spec(
+                        self.params, self.pool.storage, tables, slots,
+                        toks, pos, n)
+                    calls += 1
+            # the host-side argmax/mask group that follows every step
+            dec.next_token_ids(jnp.zeros((B, self.cfg.vocab)),
+                               jnp.asarray(np.zeros((B,), np.int32)))
+            B *= 2
+        # the pow-2 page-copy buckets behind migrations and prefix forks:
+        # null-block self-copies are bit-exact no-ops
+        b = 1
+        while b <= P:
+            self.pool.storage = dec.copy_pool_entries(
+                self.pool.storage, self.pool.spec, [0] * b, [0] * b)
+            calls += 1
+            b *= 2
+        return calls
 
     # -- latency / pool stats --------------------------------------------------
     def kv_stats(self) -> Dict[str, float]:
@@ -1240,6 +1642,28 @@ class ServeEngine:
             "recompute_tokens", 0.0)
         s["blocks_per_relayout"] = [r.get("blocks_migrated", 0.0)
                                     for r in self.relayouts]
+        # speculative decoding: acceptance totals, forward participations
+        # (the denominators of accepted-tokens-per-model-step) and the
+        # costmodel-priced bytes optimism wasted
+        s["spec_decode"] = self.ecfg.spec_decode if self._spec else "off"
+        tot = self.counters.totals
+        for k in ("spec_ticks", "spec_verify_forwards",
+                  "spec_reapply_forwards", "spec_row_forwards",
+                  "spec_row_reapplies", "spec_tokens_drafted",
+                  "spec_tokens_accepted", "spec_rollbacks",
+                  "spec_full_rejects", "spec_accept_rate",
+                  "decode_forwards", "decode_row_forwards",
+                  "decode_committed_tokens"):
+            s[k] = tot.get(k, 0.0)
+        rejected = s["spec_tokens_drafted"] - s["spec_tokens_accepted"]
+        s["spec_rejected_bytes"] = spec_rejected_bytes(self.cfg,
+                                                       int(rejected))
+        s["spec_rollback_bytes"] = spec_rollback_bytes(
+            self.cfg, int(tot.get("kv_spec_ckpt_pages", 0.0)),
+            int(tot.get("kv_spec_rollback_pages", 0.0)),
+            self.pool.block_tokens,
+            ckpts=int(tot.get("kv_spec_ckpts", 0.0)),
+            rollbacks=int(s["spec_rollbacks"]))
         return s
 
     @staticmethod

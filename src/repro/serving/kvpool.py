@@ -159,10 +159,18 @@ class KVBlockPool:
     def __init__(self, cfg: ModelConfig, *, n_domains: int, max_len: int,
                  blocks_per_domain: int, states_per_domain: int,
                  block_tokens: int = 16,
-                 counters: Optional[PerfCounters] = None):
+                 counters: Optional[PerfCounters] = None,
+                 retention: str = "access"):
+        if retention not in ("access", "blind"):
+            raise ValueError(f"unknown retention policy {retention!r}")
         self.cfg = cfg
         self.max_len = max_len
         self.n_domains = n_domains
+        # cached-tier retention: "access" reclaims the coldest published
+        # page by last-hit recency; "blind" keeps the old free-list order
+        self.retention = retention
+        self._touch_clock = 0
+        self._touch: Dict[int, int] = {}
         self.counters = counters or PerfCounters()
         self.spec = dec.cache_view_specs(cfg, max_len)
         W = self.spec.width
@@ -316,18 +324,39 @@ class KVBlockPool:
     def _state_domain(self, s: int) -> int:
         return (s - 1) // self.states_per_domain
 
+    def _touch_block(self, b: int):
+        """Record an access to a published page: ``match_prefix`` hits,
+        publication, and cached re-attachment all count.  Drives the
+        "access" retention order — colder pages are reclaimed first, per
+        the measured-access-behavior tiering argument of "Workload
+        Behavior Driven Memory Subsystem Design" (PAPERS.md)."""
+        self._touch_clock += 1
+        self._touch[b] = self._touch_clock
+
     def _pop_block(self, domain: int) -> int:
         """Take a free block at refcount 1, preferring blocks that do NOT
-        cache a published prefix page; when only cached blocks remain the
-        OLDEST free one is reclaimed and its index entry dropped."""
+        cache a published prefix page; when only cached blocks remain,
+        retention="access" reclaims the COLDEST one (least recently hit /
+        published) and "blind" the oldest-freed, dropping its index
+        entry either way."""
         free = self._free_blocks[domain]
         idx = len(free) - 1
         if self._entry_of_block:
-            idx = next((i for i in range(len(free) - 1, -1, -1)
-                        if free[i] not in self._entry_of_block), 0)
+            uncached = next((i for i in range(len(free) - 1, -1, -1)
+                             if free[i] not in self._entry_of_block), None)
+            if uncached is not None:
+                idx = uncached
+            else:
+                if self.retention == "access":
+                    idx = min(range(len(free)),
+                              key=lambda i: self._touch.get(free[i], 0))
+                else:
+                    idx = 0
+                self.counters.add("kv_cached_reclaims", 1)
         b = free.pop(idx)
         if b in self._entry_of_block:
             self._invalidate_block(b)
+        self._touch.pop(b, None)    # content is about to be replaced
         self._ref[b] = 1
         return b
 
@@ -412,6 +441,8 @@ class KVBlockPool:
                 best = o + 1
             elif e.state_ckpt:
                 best, ckpt = o + 1, e.state_ckpt
+        for b in blocks[:best]:
+            self._touch_block(b)
         return blocks[:best], ckpt
 
     def register_prefix(self, table: KVTable, keys: Sequence[bytes],
@@ -449,6 +480,7 @@ class KVBlockPool:
                     src_state=table.state_slot, dst_state=ckpt)
             self._prefix[key] = PrefixEntry(b, table.domain, ckpt)
             self._entry_of_block[b] = key
+            self._touch_block(b)
             self.counters.add("kv_prefix_pages_published", 1)
 
     def _write_pages(self, pos: int, n: int, n_blocks: int) -> List[int]:
@@ -586,7 +618,9 @@ class KVBlockPool:
             r = self._ref.get(b, 0)
             if r == 0:          # cached page comes back off the free list
                 self._free_blocks[domain].remove(b)
+                self.counters.add("kv_cached_page_hits", 1)
             self._ref[b] = r + 1
+            self._touch_block(b)
         blocks = shared + [self._pop_block(domain) for _ in range(pages)]
         slot = self._take_state(domain) if self.has_state else 0
         if self.has_state:
@@ -735,6 +769,43 @@ class KVBlockPool:
         self.spilled_bytes -= kv_spill_bytes(self.cfg, sp.pages,
                                              self.block_tokens, sp.had_state)
         table.spill = None
+
+    # -- speculative checkpoint / rollback ---------------------------------
+    def checkpoint_pages(self, table: KVTable, pos: int, n: int,
+                         pages: bool = True) -> dict:
+        """Host snapshot of the carried-state slot — and, with ``pages``,
+        exactly the pages — an ``n``-token write at ``pos`` will touch,
+        taken BEFORE a speculative verify forward commits optimistically.
+        Engines serving pure-attention models skip the page gather
+        entirely (``pages=False``): a rejected draft suffix only leaves
+        dead bytes at cursor-masked positions there, whereas a recurrent
+        state slot genuinely needs its pre-verify value back.
+
+        Must run AFTER the tick's growth/CoW phase: the touched blocks are
+        then private (refcount 1), so a later :meth:`rollback_pages` can
+        restore them in place without disturbing any sharer.  Reuses the
+        swap tier's gather, so the snapshot is the same host-leaf layout a
+        spill produces."""
+        idx = self._write_pages(pos, n, len(table.blocks)) if pages else []
+        blocks = [table.blocks[j] for j in idx]
+        slot = table.state_slot if (self.has_state and table.state_slot) \
+            else None
+        data = self._spill_gather(self.storage, blocks, state_slot=slot)
+        self.counters.add("kv_spec_ckpts", 1)
+        self.counters.add("kv_spec_ckpt_pages", len(blocks))
+        return {"blocks": blocks, "data": data, "slot": slot}
+
+    def rollback_pages(self, table: KVTable, ckpt: dict):
+        """Restore a :meth:`checkpoint_pages` snapshot: every snapshotted
+        page and the state slot return to their pre-verify bytes, erasing
+        the rejected draft suffix's effect.  The accepted prefix is then
+        re-applied by a masked chunk forward — NOT by trusting the
+        optimistic write — so the restored state advances by exactly the
+        accepted tokens."""
+        self.storage = self._spill_scatter(self.storage, ckpt["blocks"],
+                                           ckpt["data"],
+                                           state_slot=ckpt["slot"])
+        self.counters.add("kv_spec_rollback_pages", len(ckpt["blocks"]))
 
     # -- migration ---------------------------------------------------------
     def migrate(self, table: KVTable, new_domain: int) -> bool:
@@ -921,6 +992,15 @@ class KVBlockPool:
             "shared_pages": float(self.shared_pages()),
             "shared_extra_refs": float(self.shared_extra_refs()),
             "cached_pages": float(self.cached_pages()),
+            # cached-tier retention (access-ordered vs blind)
+            "retention": self.retention,
+            "cached_page_hits": snap.get("kv_cached_page_hits", 0.0),
+            "cached_reclaims": snap.get("kv_cached_reclaims", 0.0),
+            # speculative decode rollback traffic (engine-side accept
+            # counters live in kv_stats; these are the pool's halves)
+            "spec_ckpts": snap.get("kv_spec_ckpts", 0.0),
+            "spec_ckpt_pages": snap.get("kv_spec_ckpt_pages", 0.0),
+            "spec_rollback_pages": snap.get("kv_spec_rollback_pages", 0.0),
             "shared_bytes": self.shared_bytes(),
             "resident_kv_bytes": self.used_blocks() * self.bytes_per_block(),
             "logical_kv_bytes": (self.used_blocks()
