@@ -127,6 +127,37 @@ def longtail_schedule(seed: int, n: int, mean_gap: float,
     return out
 
 
+SLO_MAX_LEN = 48                        # page geometry the schedule lengths
+SLO_GROUPS = 4                          # below are tuned against
+
+
+def slo_schedule(seed: int, n_batch: int, n_interactive: int, vocab: int):
+    """Mixed-tenant arrivals for the SLO-class cells, as TWO waves.
+
+    The ``batch`` wave arrives at tight gaps: 2-page prompts whose
+    chunked prefill parks mid-prefill fast under oversubscription, so
+    the wait line grows a PARKED head holding pages.  The
+    ``interactive`` wave is 1-page requests released only once that
+    congestion exists (``run_slo_mode``'s trigger client): arrivals
+    whose charged pages fit the bypass-safety bound while FIFO would
+    hold them behind the parked head."""
+    rng = np.random.default_rng(seed)
+    bigs, inter = [], []
+    for i in range(n_batch):
+        gap = 0 if i == 0 else int(rng.integers(0, 2))
+        plen = int(rng.integers(17, 21))
+        max_new = int(rng.integers(10, 13))
+        bigs.append((gap, rng.integers(2, vocab, size=plen), max_new,
+                     "batch"))
+    for _ in range(n_interactive):
+        gap = int(rng.integers(0, 3))
+        plen = int(rng.integers(4, 8))
+        max_new = int(rng.integers(2, 5))
+        inter.append((gap, rng.integers(2, vocab, size=plen), max_new,
+                      "interactive"))
+    return bigs, inter
+
+
 def spec_schedule(seed: int, n: int, mean_gap: float,
                   vocab: int, max_len: int):
     """Seeded arrivals for the speculative-decoding cells: SHORT prompts,
@@ -196,6 +227,7 @@ def run_mode(args, cfg, *, lazy: bool, evict_mode: str = "swap",
         spec_decode=spec_decode,
         spec_k=(spec_k if spec_k is not None else args.spec_k),
         spec_ngram=args.spec_ngram,
+        slo_bypass=args.slo_bypass,
         controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
                                     min_dwell=2))
     eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
@@ -321,7 +353,8 @@ def run_prefix_mode(args, cfg, *, share: bool, prefill_chunk,
         evict_mode="swap", prefill_chunk=prefill_chunk,
         prefill_mode=args.prefill_mode, chunk_kernel=args.chunk_kernel,
         split_ticks=args.split_ticks, prefix_share=share,
-        cached_retention=args.cached_retention)
+        cached_retention=args.cached_retention,
+        slo_bypass=args.slo_bypass)
     eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
     prompts = prefix_tenant_prompts(args.seed, tenant_pages,
                                     eng.pool.block_tokens, cfg.vocab)
@@ -430,6 +463,139 @@ def run_prefix_bench(args, cfg, *, compare: bool):
           f"{kv_b['peak_active_tables']:.0f} vs "
           f"{kv_b0['peak_active_tables']:.0f} streams at "
           f"{common['pool_streams']} streams/domain)")
+
+
+def run_slo_mode(args, cfg, sched, *, bypass: bool):
+    """One SLO-class cell.  The regime is PINNED (not taken from the
+    generic args): four single-chip chiplet-group domains each sized for
+    ONE max-length stream (``pool_streams=1`` — two batch tables
+    oversubscribe a domain), swap-tier eviction, chunked-lazy growth,
+    and the size-aware bypass toggled by ``bypass``.  adaptive=False
+    keeps the twin runs deterministic (no controller relayouts).
+
+    The interactive wave is submitted by a TRIGGER client that waits for
+    the first mid-flight park: the wave lands exactly when the wait line
+    has a parked head.  Twin dynamics are identical up to the first
+    bypass grant (the no-bypass engine still WAKES bypass-class waiters,
+    it just never grants them), so the trigger fires at the same round
+    in both cells and the head-starvation gate compares like for like."""
+    bigs, inter = sched
+    topo = ChipletTopology(n_pods=1, groups_per_pod=SLO_GROUPS,
+                           chips_per_group=1)
+    ecfg = EngineConfig(
+        max_batch=4, max_len=SLO_MAX_LEN, adaptive=False, lazy=True,
+        pool_streams=1, evict_mode="swap", slo_bypass=bypass)
+    eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.slo_seed)
+    eng.open_loop_client(bigs)
+    eng._clients += 1
+
+    def iclient():
+        try:
+            while not eng._parked:
+                yield
+            for gap, prompt, max_new, cls in inter:
+                for _ in range(int(gap)):
+                    yield
+                eng.submit(prompt, max_new, cls=cls)
+        finally:
+            eng._clients -= 1
+
+    eng.sched.spawn(iclient(), name="slo-interactive", priority=2)
+    eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "slo bench deadlock"
+    return eng
+
+
+def admission_delay_rounds(eng, cls: str):
+    """Deterministic TTFT proxy: engine rounds from submit to the first
+    page grant, per request of ``cls`` — round-counted, so the bypass-on
+    vs bypass-off comparison is seed-exact (no wall-clock noise)."""
+    return [r.grant_rounds[0] - r.arrive_round
+            for r in eng.submitted if r.cls == cls and r.grant_rounds]
+
+
+def run_slo_bench(args, cfg):
+    """The mixed-tenant SLO-class workload (``--slo-classes``): the SAME
+    seeded schedule through the size-aware bypass engine and a FIFO-only
+    twin.  Gates, all asserted in-run:
+
+      1. token identity per rid (the bypass must be invisible in output);
+      2. the bypass actually fired (and the twin never did);
+      3. strictly more peak concurrent reservations with bypass;
+      4. ZERO head starvation — the head the FIRST bypass jumped is
+         re-granted at the same round or EARLIER than in the FIFO twin
+         (dynamics are twin-identical up to that round, so the comparison
+         is exact);
+      5. interactive admission delay (round-counted TTFT proxy) p99
+         strictly improves, with per-class wall-clock TTFT/TPOT p50/p99
+         reported from ``kv_stats()['per_class']``.
+    """
+    sched = slo_schedule(args.slo_seed, 8, 8, cfg.vocab)
+    cells = {}
+    for bypass in (True, False):
+        tag = "bypass" if bypass else "fifo"
+        eng = run_slo_mode(args, cfg, sched, bypass=bypass)
+        kv = eng.kv_stats()
+        for c, st in sorted(kv["per_class"].items()):
+            if not st.get("n"):
+                continue
+            emit([row(f"slo_ttft_p50[{tag},{c}]", st["ttft_p50"] * 1e6,
+                      f"p99={st['ttft_p99']*1e6:.0f}us n={st['n']:.0f} "
+                      f"admit_delay_p99="
+                      f"{np.percentile(admission_delay_rounds(eng, c), 99):.0f}"
+                      f" rounds"),
+                  row(f"slo_tpot_p50[{tag},{c}]", st["tpot_p50"] * 1e6,
+                      f"p99={st['tpot_p99']*1e6:.0f}us "
+                      f"tokens={st['tokens']:.0f}")])
+        emit([row(f"slo_admitted[{tag}]", kv["peak_active_tables"],
+                  f"peak concurrent reservations; bypass_grants="
+                  f"{kv['bypass_grants']:.0f} "
+                  f"floor_pages={kv['bypass_floor_pages']:.0f} "
+                  f"head_wait_ticks={kv['head_wait_ticks']:.0f} "
+                  f"spills={kv['spills']:.0f} "
+                  f"(watchdog={kv['watchdog_spills']:.0f})")])
+        cells[bypass] = (eng, kv)
+    on, kv_on = cells[True]
+    off, kv_off = cells[False]
+    toks = {b: [r.generated for r in sorted(cells[b][0].submitted,
+                                            key=lambda r: r.rid)]
+            for b in cells}
+    # gate 1 — the CI divergence gate
+    assert toks[True] == toks[False], "slo bypass changed tokens"
+    # gate 2 — the mechanism fired, and only when enabled
+    assert kv_on["bypass_grants"] > 0, \
+        "bypass never fired — the schedule stopped congesting the line"
+    assert kv_off["bypass_grants"] == 0, "FIFO twin granted a bypass"
+    # gate 3 — strictly more admitted concurrency on the same schedule
+    assert kv_on["peak_active_tables"] > kv_off["peak_active_tables"], \
+        f"bypass admitted {kv_on['peak_active_tables']:.0f} concurrent " \
+        f"streams, FIFO {kv_off['peak_active_tables']:.0f} — not " \
+        f"strictly more"
+    # gate 4 — zero head starvation: the first jumped head's re-grant
+    r0, _, head_rid = on.bypass_log[0]
+    grant_on = next((t for t in on.submitted[head_rid].grant_rounds
+                     if t >= r0), None)
+    grant_off = next((t for t in off.submitted[head_rid].grant_rounds
+                      if t >= r0), None)
+    assert grant_on is not None and grant_off is not None, \
+        f"jumped head rid={head_rid} has no re-grant after round {r0}"
+    delay = grant_on - grant_off
+    assert delay <= 0, \
+        f"bypass delayed the jumped head rid={head_rid}: granted at " \
+        f"round {grant_on} vs {grant_off} in the FIFO twin"
+    # gate 5 — the interactive win, round-counted (seed-exact)
+    d_on = admission_delay_rounds(on, "interactive")
+    d_off = admission_delay_rounds(off, "interactive")
+    p99_on, p99_off = np.percentile(d_on, 99), np.percentile(d_off, 99)
+    assert p99_on < p99_off, \
+        f"interactive admission-delay p99 {p99_on:.0f} rounds not below " \
+        f"FIFO's {p99_off:.0f}"
+    print(f"slo bypass token-identical: True "
+          f"(bypass_grants={kv_on['bypass_grants']:.0f}, admitted "
+          f"{kv_on['peak_active_tables']:.0f} vs "
+          f"{kv_off['peak_active_tables']:.0f} streams, head delay="
+          f"{delay} rounds, interactive admit-delay p99 "
+          f"{p99_on:.0f} vs {p99_off:.0f} rounds)")
 
 
 def accepted_per_model_step(eng, kv) -> float:
@@ -611,6 +777,25 @@ def main():
     ap.add_argument("--spec-ngram", type=int, default=3,
                     help="longest n-gram the prompt-lookup drafter "
                          "matches against the stream's own history")
+    ap.add_argument("--slo-classes", action="store_true",
+                    help="run ONLY the mixed-tenant SLO-class workload: "
+                         "long batch requests congest the wait line while "
+                         "1-page interactive requests arrive behind the "
+                         "parked head, bypass-on vs the FIFO-only twin on "
+                         "the same seed.  Asserts token identity, strictly "
+                         "higher admitted concurrency, ZERO head delay and "
+                         "a strictly better interactive admission-delay "
+                         "p99")
+    ap.add_argument("--slo-seed", type=int, default=10,
+                    help="seed for the mixed-tenant SLO schedule (pinned "
+                         "separately from --seed: the SLO cells run their "
+                         "own tuned regime)")
+    ap.add_argument("--slo-bypass", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="size-aware SLO bypass in the engine under test; "
+                         "--no-slo-bypass pins the strict-FIFO grant rule "
+                         "(the baseline the spec/prefix smoke cells run "
+                         "against)")
     ap.add_argument("--cached-retention", choices=("access", "blind"),
                     default="access",
                     help="free-but-cached page reclaim order for the "
@@ -627,6 +812,9 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
+    if args.slo_classes:
+        run_slo_bench(args, cfg)
+        return
     if args.spec_decode != "off":
         run_spec_bench(args, cfg)
         return

@@ -193,6 +193,24 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
             + (kv_state_bytes(cfg) if with_state else 0.0))
 
 
+def kv_bypass_floor_bytes(cfg: ModelConfig, head_need_pages: int,
+                          block_tokens: int,
+                          with_state: bool = False) -> float:
+    """Device bytes a size-aware bypass grant must leave FREE for the
+    blocked head of the admission wait line — the bypass-safety bound.
+
+    The head's provable need is a page count (its next grow chunk, a
+    whole-table migrate, or its spill-restore footprint); this prices it
+    at the same per-token ring rate as :func:`kv_spill_bytes` — by
+    construction: a floor large enough to restore the head from the swap
+    tier is large enough for every cheaper regrant path.  ``with_state``
+    adds the per-stream state slot a spilled hybrid head re-takes on
+    restore.  A bypass is safe only when the granting domain keeps this
+    floor free, so the head's time-to-grant is never delayed."""
+    return (max(head_need_pages, 0) * block_tokens * kv_token_bytes(cfg)
+            + (kv_state_bytes(cfg) if with_state else 0.0))
+
+
 def spec_rejected_bytes(cfg: ModelConfig, rejected_tokens: int) -> float:
     """HBM bytes the speculative verify forward moved for draft tokens
     greedy acceptance then threw away — the honest cost of optimism.

@@ -70,6 +70,11 @@ class StepSample:
     spec_tokens_accepted: float = 0.0
     spec_rollbacks: float = 0.0
     spec_accept_rate: float = 0.0
+    # SLO-tiered admission: requests granted PAST a blocked line head
+    # (size-aware bypass, provably without delaying the head) and rounds
+    # the wait line spent non-empty — deltas since the previous sample.
+    kv_bypass_grants: float = 0.0
+    kv_head_wait_ticks: float = 0.0
 
 
 class PerfCounters:
@@ -111,7 +116,9 @@ class PerfCounters:
                     spec_tokens_drafted: float = 0.0,
                     spec_tokens_accepted: float = 0.0,
                     spec_rollbacks: float = 0.0,
-                    spec_accept_rate: float = 0.0):
+                    spec_accept_rate: float = 0.0,
+                    kv_bypass_grants: float = 0.0,
+                    kv_head_wait_ticks: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -130,7 +137,9 @@ class PerfCounters:
                                        kv_shared_pages, kv_shared_bytes,
                                        spec_tokens_drafted,
                                        spec_tokens_accepted,
-                                       spec_rollbacks, spec_accept_rate))
+                                       spec_rollbacks, spec_accept_rate,
+                                       kv_bypass_grants,
+                                       kv_head_wait_ticks))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

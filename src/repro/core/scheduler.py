@@ -116,7 +116,16 @@ class GlobalScheduler:
                 prefill_tokens_skipped=step_metrics.get(
                     "prefill_tokens_skipped", 0.0),
                 kv_shared_pages=step_metrics.get("kv_shared_pages", 0.0),
-                kv_shared_bytes=step_metrics.get("kv_shared_bytes", 0.0))
+                kv_shared_bytes=step_metrics.get("kv_shared_bytes", 0.0),
+                spec_tokens_drafted=step_metrics.get("spec_tokens_drafted",
+                                                     0.0),
+                spec_tokens_accepted=step_metrics.get(
+                    "spec_tokens_accepted", 0.0),
+                spec_rollbacks=step_metrics.get("spec_rollbacks", 0.0),
+                spec_accept_rate=step_metrics.get("spec_accept_rate", 0.0),
+                kv_bypass_grants=step_metrics.get("kv_bypass_grants", 0.0),
+                kv_head_wait_ticks=step_metrics.get("kv_head_wait_ticks",
+                                                    0.0))
         self.last_active = (self.tasks.tick()
                             if run_tasks and self.tasks.pending() else 0)
         return self._control()

@@ -158,12 +158,23 @@ class WaitQueue:
     any ``wake`` (triggered by another task's step) can only run after the
     yield has been processed and the task really is blocked.  ``wake``
     re-enqueues parked tasks via ``TaskRuntime.unblock`` in FIFO order.
+
+    The line is ordered by an explicit per-entry SEQ (a monotonic counter
+    drawn at park time by default).  ``park(task, seq=...)`` lets a caller
+    re-insert a task at a position it held earlier: the serving engine's
+    size-aware bypass removes grantees from the MIDDLE of the line, and a
+    bypassed stream that later parks mid-decode re-enters at its original
+    arrival seq — not the back — so bypass never costs a stream its
+    arrival-order claim.  ``to_back`` still draws a fresh (maximal) seq:
+    spill victims consumed their turn.
     """
 
     def __init__(self, runtime: "TaskRuntime", clock=time.monotonic):
         self._rt = runtime
         self._clock = clock
-        self._q: "collections.OrderedDict[int, Task]" = collections.OrderedDict()
+        self._next_seq = 0
+        self._q: Dict[int, Task] = {}
+        self._order: Dict[int, int] = {}    # task.id -> line seq
         self._parked_at: Dict[int, float] = {}
 
     def __len__(self) -> int:
@@ -172,13 +183,34 @@ class WaitQueue:
     def __contains__(self, task: Task) -> bool:
         return task.id in self._q
 
-    def park(self, task: Task):
+    def _line(self) -> List[Task]:
+        return sorted(self._q.values(), key=lambda t: self._order[t.id])
+
+    def park(self, task: Task, seq: Optional[int] = None) -> int:
         """Join the wait line (idempotent: re-parking a task already in the
         line keeps its position, so a woken task that fails its retry and
-        parks again has not lost its turn)."""
-        if task.id not in self._q:
-            self._parked_at[task.id] = self._clock()
+        parks again has not lost its turn).  ``seq`` pins the line position
+        (see class docstring); default is a fresh counter value — the back
+        of the line.  Returns the seq the task holds."""
+        if task.id in self._q:
+            return self._order[task.id]
+        self._parked_at[task.id] = self._clock()
         self._q[task.id] = task
+        s = self._draw() if seq is None else seq
+        # keep the counter strictly past any pinned seq, so a later
+        # default park or ``to_back`` is genuinely the back of the line
+        self._next_seq = max(self._next_seq, s + 1)
+        self._order[task.id] = s
+        return s
+
+    def _draw(self) -> int:
+        s = self._next_seq
+        self._next_seq += 1
+        return s
+
+    def seq_of(self, task: Task) -> Optional[int]:
+        """The line seq ``task`` holds, or None if it is not in the line."""
+        return self._order.get(task.id)
 
     def remove(self, task: Task):
         """Leave the line — called by the task itself once its resource
@@ -186,18 +218,23 @@ class WaitQueue:
         keeps grants FIFO: new arrivals check ``len(queue)`` and a
         woken-but-not-yet-granted head still counts."""
         self._q.pop(task.id, None)
+        self._order.pop(task.id, None)
         self._parked_at.pop(task.id, None)
 
-    def to_back(self, task: Task):
+    def to_back(self, task: Task) -> Optional[int]:
         """Re-queue a parked task at the BACK of the line — the regrant
         path for a stream whose resources were reclaimed mid-wait (e.g. a
         KV table spilled to the swap tier): it consumed its turn, so every
         waiter currently in line now goes first.  Resets its parked-since
-        clock (the new wait starts now); a no-op for tasks not in line."""
+        clock (the new wait starts now); a no-op for tasks not in line.
+        Returns the fresh seq (None for the no-op) so the caller can
+        retire any arrival-position claim the task held."""
         if task.id not in self._q:
-            return
-        self._q.move_to_end(task.id)
+            return None
+        s = self._draw()
+        self._order[task.id] = s
         self._parked_at[task.id] = self._clock()
+        return s
 
     def parked_since(self, task: Task) -> Optional[float]:
         """Clock time at which ``task`` first joined the line (survives
@@ -205,30 +242,32 @@ class WaitQueue:
         return self._parked_at.get(task.id)
 
     def oldest(self) -> Optional[Task]:
-        """The longest-parked task — the one a free is granted to first."""
-        for t in self._q.values():
-            return t
-        return None
+        """The lowest-seq task — the one a free is granted to first."""
+        line = self._line()
+        return line[0] if line else None
 
     def youngest(self) -> Optional[Task]:
-        """The most-recently-parked task — the back of the line.  (Note:
-        the serving engine's eviction watchdog picks its victim from its
-        own mid-decode park records, NOT from this line, which also holds
+        """The highest-seq task — the back of the line.  (Note: the
+        serving engine's eviction watchdog picks its victim from its own
+        mid-decode park records, NOT from this line, which also holds
         admission tasks that hold no resources worth reclaiming.)"""
-        out = None
-        for t in self._q.values():
-            out = t
-        return out
+        line = self._line()
+        return line[-1] if line else None
+
+    def tasks(self) -> List[Task]:
+        """The whole line, front (lowest seq) first — the bypass safety
+        scan walks this to apply the aging backstop."""
+        return self._line()
 
     def wake(self, n: Optional[int] = None) -> int:
         """Wake the first ``n`` parked tasks (all when n is None) without
         removing them; returns the number woken.  Waking a task that is
         already runnable is a no-op (``unblock`` ignores it)."""
         woken = 0
-        for tid in list(self._q):
+        for task in self._line():
             if n is not None and woken >= n:
                 break
-            self._rt.unblock(self._q[tid])
+            self._rt.unblock(task)
             woken += 1
         return woken
 

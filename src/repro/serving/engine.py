@@ -104,12 +104,38 @@ from repro.core.tasks import BLOCK, WaitQueue
 from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
-from repro.core.costmodel import prefill_chunk_bytes, \
-    prefill_chunk_score_bytes, spec_rejected_bytes, spec_rollback_bytes
+from repro.core.costmodel import kv_bypass_floor_bytes, \
+    prefill_chunk_bytes, prefill_chunk_score_bytes, spec_rejected_bytes, \
+    spec_rollback_bytes
 from repro.launch.steps import make_prefill, make_serve_chunk_step, \
     make_serve_step, make_spec_verify_step
 from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
 from repro.serving.spec import make_drafter
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSLO:
+    """Per-request-class service targets + scheduling privileges.
+
+    ``ttft_target``/``tpot_target`` are reporting targets (seconds to
+    first token / seconds per output token after the first) the per-class
+    latency stats are judged against; ``bypass`` marks the class eligible
+    for the size-aware admission bypass — a grant past a blocked line
+    head, allowed only under the provable no-delay bound."""
+    ttft_target: float = math.inf
+    tpot_target: float = math.inf
+    bypass: bool = False
+
+
+#: The default two-tier mix: latency-sensitive ``interactive`` requests
+#: may bypass (their small footprints are exactly what fits the safety
+#: bound); throughput ``batch`` requests — the submit() default — never
+#: do, so single-class workloads keep the strict-FIFO grant order and
+#: every pre-existing counter baseline.
+DEFAULT_SLO_CLASSES: Dict[str, ClassSLO] = {
+    "interactive": ClassSLO(ttft_target=0.5, tpot_target=0.05, bypass=True),
+    "batch": ClassSLO(),
+}
 
 
 @dataclasses.dataclass
@@ -126,6 +152,19 @@ class Request:
     table: Optional[KVTable] = None     # paged mode: KV pages + state slot
     prefix_tokens: int = 0              # prompt tokens served from shared
                                         # prefix pages (prefill starts here)
+    cls: str = "batch"                  # SLO class (EngineConfig.slo_classes)
+    bypassed: bool = False              # granted past a blocked line head
+    wq_seq: Optional[int] = None        # wait-line seq drawn at submit; a
+                                        # BYPASSED stream that parks later
+                                        # re-enters at this arrival position
+    grant_rounds: List[int] = dataclasses.field(default_factory=list)
+                                        # engine round of every page grant
+                                        # (admission, regrow, restore) — the
+                                        # no-starvation gates compare these
+    arrive_round: int = 0               # engine round at submit: with
+                                        # grant_rounds this gives a
+                                        # deterministic (round-based)
+                                        # admission-delay metric
     page_keys: Optional[List[bytes]] = dataclasses.field(
         default=None, repr=False, compare=False)  # prompt hash chain
     _kv_fn: Optional[Callable[[int], float]] = dataclasses.field(
@@ -219,6 +258,31 @@ class EngineConfig:
                                        # "access" evicts the coldest page
                                        # by last-hit recency, "blind" the
                                        # PR-7 free-list order
+    slo_classes: Dict[str, ClassSLO] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_SLO_CLASSES))
+                                       # request classes submit() accepts;
+                                       # unknown names fail fast
+    slo_bypass: bool = True            # size-aware bypass: a bypass-class
+                                       # request may be granted past a
+                                       # PARKED line head when its charged
+                                       # pages fit under the head's provable
+                                       # need (never delays the head); off
+                                       # = strict FIFO even for bypass
+                                       # classes
+    slo_aging_rounds: int = 200        # bypass fairness backstop: bypass is
+                                       # suspended while ANY waiter ahead of
+                                       # the candidate has been blocked
+                                       # longer than this many rounds — the
+                                       # line drains strictly FIFO until the
+                                       # aged waiter is granted
+    spill_watermarks: Optional[Tuple[float, float]] = None
+                                       # (high, low) per-domain occupancy
+                                       # marks for PROACTIVE spill of the
+                                       # coldest parked stream BEFORE the
+                                       # stall watchdog fires; hysteresis:
+                                       # a domain that spilled at high
+                                       # re-arms only under low.  None =
+                                       # watchdog-only (the PR-4 ladder)
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -333,6 +397,28 @@ class ServeEngine:
         self._park_seq = itertools.count()
         self._progress_mark = -1.0
         self._stall_rounds = 0
+        self._round = 0                 # scheduler rounds seen (_stall_hook)
+        self._head_id: Optional[int] = None   # current line-head task id and
+        self._head_wait = 0                   # rounds it has sat blocked there
+        if not ecfg.slo_classes:
+            raise ValueError("slo_classes must name at least one class")
+        # size-aware bypass bookkeeping: round each waiter joined the line
+        # (the aging backstop's clock) and the waiting admission cells of
+        # bypass-eligible classes (targeted wakes — non-head waiters only
+        # retry when a bypass could actually have opened)
+        # _bypass_wake: bypass-class waiters are WOKEN on frees/grants (so a
+        # ``slo_bypass=False`` twin steps task-for-task with the bypass
+        # engine until the first actual bypass grant — the no-starvation
+        # comparison is exact, not cadence-polluted); _bypass_on gates the
+        # GRANTS themselves
+        self._bypass_wake = bool(ecfg.paged
+                                 and any(c.bypass
+                                         for c in ecfg.slo_classes.values()))
+        self._bypass_on = bool(self._bypass_wake and ecfg.slo_bypass)
+        self._wait_round: Dict[int, int] = {}
+        self._bypass_cells: Dict[int, Dict[str, Any]] = {}
+        # every bypass grant as (round, granted rid, jumped head rid)
+        self.bypass_log: List[Tuple[int, int, int]] = []
         if ecfg.paged:
             streams = ecfg.pool_streams or ecfg.max_batch
             budget = KVBlockPool.blocks_for_streams(
@@ -343,8 +429,12 @@ class ServeEngine:
                 retention=ecfg.cached_retention, **budget)
             self.waiters = WaitQueue(self.runtime)
             # wake ONE waiter per free: grants stay FIFO (a successful
-            # admission cascades the wake to the next waiter itself)
-            self.pool.on_free(lambda: self.waiters.wake(1))
+            # admission cascades the wake to the next waiter itself).
+            # Bypass-eligible waiters are additionally woken — they are
+            # allowed to attempt a grant without being the head
+            self.pool.on_free(self._on_pool_free)
+            if ecfg.spill_watermarks is not None:
+                self.pool.set_watermarks(*ecfg.spill_watermarks)
             # donate the pool storage: the scatter-back updates in place
             # instead of copying the whole fleet's blocks every tick
             self._paged_decode = jax.jit(self._make_paged_decode(),
@@ -485,13 +575,134 @@ class ServeEngine:
             return True
         return any(self.pool.migrate(table, d) for d in self._domain_order(g))
 
+    # -- size-aware bypass (PR 9): grant past a blocked head, provably free --
+    def _head_rec(self) -> Optional[_Parked]:
+        """The line head's park record — None when the head is an
+        ADMISSION task.  Bypass only ever jumps a PARKED head: a blocked
+        admission can be served from any domain, so every page in the
+        pool is a page it might need and no provable slack exists; a
+        parked stream's need is pinned to specific domains, leaving the
+        rest of the pool provably useless to it."""
+        head = self.waiters.oldest()
+        if head is None:
+            return None
+        for rec in self._parked.values():
+            if rec.cell.get("task") is head:
+                return rec
+        return None
+
+    def _head_need_in(self, rec: _Parked, d: int
+                      ) -> Optional[Tuple[int, bool]]:
+        """``(pages, needs_state)``: the blocked head's PROVABLE need from
+        domain ``d`` — the free-block floor a bypass grant in ``d`` must
+        leave behind so the head's time-to-grant cannot be delayed.
+
+        A spilled head restores anywhere: its floor is its host pages
+        plus next-chunk growth (and a state slot) in EVERY domain.  A
+        parked grower is pinned: its own domain owes the next-chunk
+        pages, its replica group's other domains owe a whole-table
+        migrate, and domains OUTSIDE its group owe NOTHING — growth and
+        migration never leave the group, so those domains' pages are
+        provably useless to the head.  That last case is the bypass
+        window this whole mechanism exists for."""
+        t = rec.req.table
+        if t.spill is not None:
+            n, _ = self._next_chunk_need(rec.req, rec.pos)
+            grow = max(0, self.pool.pages_needed(rec.pos + n)
+                       - t.spill.pages)
+            return t.spill.pages + grow, t.spill.had_state
+        n, need = self._next_chunk_need(rec.req, rec.pos)
+        need = max(need, 0)
+        if d == t.domain:
+            return need, False
+        g = self._owner_group(t.domain)
+        if d in g.domains:
+            return len(t.blocks) + need, False
+        return 0, False
+
+    def _aging_clear(self, task) -> bool:
+        """The bypass fairness backstop: True when no waiter AHEAD of
+        ``task`` has been blocked longer than ``slo_aging_rounds`` —
+        otherwise bypass is suspended and the line drains strictly FIFO
+        until the aged waiter is granted.  (The head itself is protected
+        by the safety bound; this bounds how long anyone else can be
+        repeatedly jumped.)"""
+        limit = self.ecfg.slo_aging_rounds
+        my = self.waiters.seq_of(task)
+        if my is None:
+            return False
+        for t in self.waiters.tasks():
+            if self.waiters.seq_of(t) >= my:
+                return True             # reached ourselves: all clear
+            if self._round - self._wait_round.get(t.id, self._round) > limit:
+                return False
+        return True
+
+    def _try_bypass(self, req: Request, total_tokens: int
+                    ) -> Tuple[Optional["_Group"], Optional[KVTable]]:
+        """Attempt a size-aware bypass grant for a non-head waiter.
+
+        The reservation is EAGER (full cap pages up front, minus
+        prefix-match credit) even on the lazy path: a bypassed stream
+        never grows, so its footprint can never later eat into frees the
+        head is waiting for — the no-delay bound is checked once, at
+        grant time, and stays true.  Per candidate domain the grant must
+        keep ``head_need`` free blocks (reserve's unclamped ``min_free``
+        floor) and, for a spilled hybrid head, a second state slot."""
+        rec = self._head_rec()
+        if rec is None or rec.req.table is None:
+            return None, None
+        cands = [(g, d)
+                 for g in sorted(self.groups,
+                                 key=lambda gr: (gr.kv_pressure(),
+                                                 len(gr.queue), gr.gid))
+                 for d in self._domain_order(g)]
+        matches: Dict[int, Tuple[List[int], int]] = {}
+        if req.page_keys:
+            matches = {d: self.pool.match_prefix(d, req.page_keys,
+                                                 prompt_len=len(req.prompt))
+                       for _, d in cands}
+            cands.sort(key=lambda gd: -len(matches[gd[1]][0]))
+        headroom = self.ecfg.headroom if self._lazy else 0
+        for g, d in cands:
+            bound = self._head_need_in(rec, d)
+            if bound is None:
+                continue
+            hn, head_state = bound
+            if (head_state and self.pool.has_state
+                    and self.pool.free_states(d) < 2):
+                continue                # the head's restore slot is not ours
+            shared, ckpt = matches.get(d, ((), 0))
+            table = self.pool.reserve(d, total_tokens,
+                                      first_tokens=None,  # eager: no growth
+                                      headroom=headroom,
+                                      min_free=hn,
+                                      count_failure=False,
+                                      prefix_blocks=shared,
+                                      prefix_state=ckpt)
+            if table is not None:
+                self.counters.add("kv_bypass_floor_pages", hn)
+                # (round, granted rid, jumped head rid): the no-starvation
+                # gates compare the FIRST entry's head across bypass-on/off
+                # twins — dynamics are identical up to that round
+                self.bypass_log.append((self._round, req.rid, rec.req.rid))
+                return g, table
+        return None, None
+
     # -- submission ---------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+    def submit(self, prompt: np.ndarray, max_new: int,
+               cls: str = "batch") -> Request:
+        if cls not in self.ecfg.slo_classes:
+            raise ValueError(
+                f"unknown SLO class {cls!r}: configured classes are "
+                f"{sorted(self.ecfg.slo_classes)}")
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new,
-                      arrived=self._clock())
+                      arrived=self._clock(), cls=cls,
+                      arrive_round=self._round)
         req._kv_fn = self._kv_fn
         self._inflight += 1
         self.submitted.append(req)
+        self.counters.add(f"kv_class_submits/{cls}", 1)
         if not self.ecfg.paged:
             # legacy: route straight to the least-pressured group's queue
             g = min(self.groups,
@@ -499,7 +710,7 @@ class ServeEngine:
             req.group = g.gid
             self.queues.push(g.gid, req)
             return req
-        cell: Dict[str, Any] = {}
+        cell: Dict[str, Any] = {"req": req}
         cell["task"] = self.sched.spawn(
             self._admission_task(req, cell), name=f"admit{req.rid}",
             priority=1)
@@ -507,8 +718,34 @@ class ServeEngine:
         # order, not coroutine execution order (workers pop LIFO, so a
         # burst of arrivals would otherwise be admitted newest-first — and
         # could starve a stream parked mid-decode before they arrived)
-        self.waiters.park(cell["task"])
+        req.wq_seq = self._join_line(cell["task"])
+        if self._bypass_wake and self.ecfg.slo_classes[cls].bypass:
+            self._bypass_cells[cell["task"].id] = cell
         return req
+
+    # -- wait-line bookkeeping (size-aware bypass, PR 9) --------------------
+    def _join_line(self, task, seq: Optional[int] = None) -> int:
+        s = self.waiters.park(task, seq=seq)
+        self._wait_round.setdefault(task.id, self._round)
+        return s
+
+    def _leave_line(self, task):
+        """Grant-time cleanup + wake cascade: the next head retries, and
+        bypass-eligible waiters get a shot too (a grant may have changed
+        the head — and with it the safety bound)."""
+        self.waiters.remove(task)
+        self._wait_round.pop(task.id, None)
+        self._bypass_cells.pop(task.id, None)
+        self.waiters.wake(1)            # maybe the next waiter fits too
+        self._wake_bypassers()
+
+    def _on_pool_free(self):
+        self.waiters.wake(1)
+        self._wake_bypassers()
+
+    def _wake_bypassers(self):
+        for cell in self._bypass_cells.values():
+            self.runtime.unblock(cell["task"])
 
     def _admission_task(self, req: Request, cell: Dict[str, Any]):
         """Per-request coroutine: reserve KV pages, sweeping groups by
@@ -518,7 +755,15 @@ class ServeEngine:
         admission is in the wait line from submit time and only the line
         HEAD attempts a reservation, waiters stay in the line until their
         reservation is GRANTED, and a successful admission cascades the
-        wake to the next waiter (frees wake exactly one task)."""
+        wake to the next waiter (frees wake exactly one task).
+
+        ONE exception (PR 9, size-aware bypass): a bypass-class request
+        may be granted while NOT the head — but only past a PARKED head,
+        only in a domain where the grant provably leaves the head's whole
+        restore/grow need free (``_try_bypass``), and only while no
+        waiter ahead of it has aged past the fairness backstop.  The
+        head's time-to-grant is untouched by construction: strict FIFO
+        order is relaxed exactly where relaxing it is free."""
         total = len(req.prompt) + req.max_new
         # lazy: only the first chunk's pages are committed at admission
         first = (min(self._chunk, max(1, len(req.prompt)))
@@ -526,16 +771,25 @@ class ServeEngine:
         if self._share and req.page_keys is None:
             req.page_keys = self.pool.prefix_keys(req.prompt)
         while True:
-            if self.waiters.oldest() is not cell["task"]:
-                yield BLOCK             # not our turn: the grant cascade
-                continue                # (or a free) will wake the head
-            g, table = self._try_admit(total, first, req.page_keys,
-                                       len(req.prompt))
-            if table is not None:
-                break
-            yield BLOCK                 # woken by KVBlockPool.free
-        self.waiters.remove(cell["task"])
-        self.waiters.wake(1)            # maybe the next waiter fits too
+            if self.waiters.oldest() is cell["task"]:
+                g, table = self._try_admit(total, first, req.page_keys,
+                                           len(req.prompt))
+                if table is not None:
+                    break
+            elif (self._bypass_on
+                    and cell["task"].id in self._bypass_cells
+                    and self._aging_clear(cell["task"])):
+                g, table = self._try_bypass(req, total)
+                if table is not None:
+                    req.bypassed = True
+                    self.counters.add("kv_bypass_grants", 1)
+                    self.counters.add(f"kv_class_bypass/{req.cls}", 1)
+                    break
+            yield BLOCK                 # woken by KVBlockPool.free (heads
+                                        # + bypass candidates) or a grant
+        self._leave_line(cell["task"])
+        req.grant_rounds.append(self._round)
+        self.counters.add(f"kv_class_admits/{req.cls}", 1)
         req.table = table
         # shared prefix pages are already filled: prefill resumes at the
         # first unmatched chunk boundary (identical to a restored park)
@@ -548,19 +802,23 @@ class ServeEngine:
                          ) -> Any:
         """Spawn an open-loop client on the shared TaskRuntime.
 
-        ``schedule`` yields ``(gap_rounds, prompt, max_new)``: the client
-        sleeps ``gap_rounds`` engine rounds (cooperative yields), then
-        submits — arrivals over time instead of an up-front queue, so the
-        controller sees steady-state load and tail latencies are real.
+        ``schedule`` yields ``(gap_rounds, prompt, max_new)`` or
+        ``(gap_rounds, prompt, max_new, cls)``: the client sleeps
+        ``gap_rounds`` engine rounds (cooperative yields), then submits —
+        arrivals over time instead of an up-front queue, so the controller
+        sees steady-state load and tail latencies are real.  The optional
+        4th element tags the arrival's SLO class (default ``"batch"``).
         """
         self._clients += 1
 
         def client():
             try:
-                for gap, prompt, max_new in schedule:
+                for item in schedule:
+                    gap, prompt, max_new = item[0], item[1], item[2]
+                    cls = item[3] if len(item) > 3 else "batch"
                     for _ in range(int(gap)):
                         yield
-                    self.submit(prompt, max_new)
+                    self.submit(prompt, max_new, cls=cls)
             finally:
                 self._clients -= 1
 
@@ -769,8 +1027,13 @@ class ServeEngine:
             self._regrow_task(rec), name=f"regrow{req.rid}", priority=1)
         # join the line NOW (synchronously): a request admitted after this
         # park must queue behind it — mid-decode streams cannot be starved
-        # by newcomers (grants are FIFO by park order)
-        self.waiters.park(rec.cell["task"])
+        # by newcomers (grants are FIFO by park order).  A BYPASSED stream
+        # re-enters at its original ARRIVAL seq instead: it jumped the line
+        # once under the no-delay bound, but parking must not also demote
+        # it behind arrivals it legitimately preceded (to_back stays
+        # reserved for spill victims, who consumed their turn)
+        req.wq_seq = self._join_line(
+            rec.cell["task"], seq=req.wq_seq if req.bypassed else None)
 
     def _regrow_task(self, rec: _Parked):
         """Waiter coroutine for a mid-decode parked stream: retry growth
@@ -802,8 +1065,8 @@ class ServeEngine:
                 if self._grow_stream(req, g, max(need, 0), tuple(forks)):
                     break
             yield BLOCK                 # woken by KVBlockPool.free
-        self.waiters.remove(rec.cell["task"])
-        self.waiters.wake(1)            # maybe the next waiter fits too
+        self._leave_line(rec.cell["task"])
+        req.grant_rounds.append(self._round)
         self._parked.pop(req.rid, None)
         req.group = g.gid
         g.resume.append(_InFlight(req, None, rec.pos, rec.token))
@@ -856,19 +1119,70 @@ class ServeEngine:
         loses the least work and nobody behind it in the line exists)."""
         if self.pool is None:
             return
+        self._round += 1
+        if len(self.waiters):
+            # rounds the wait line spent non-empty: the head-blocking
+            # exposure the size-aware bypass converts into admissions
+            self.counters.add("kv_head_wait_ticks", 1)
+        head = self.waiters.oldest()
+        hid = head.id if head is not None else None
+        if hid != self._head_id:
+            self._head_id, self._head_wait = hid, 0
+        elif hid is not None:
+            self._head_wait += 1
+        # proactive-spill rung of the pressure ladder: a domain crossing
+        # its HIGH occupancy watermark sheds ONE cold parked stream NOW,
+        # before the allocation stall can close into a watchdog-grade
+        # deadlock (hysteresis: it re-arms only under the LOW mark)
+        if self._parked:
+            for d in self.pool.watermark_domains():
+                if self._spill_parked(domain=d):
+                    self.pool.watermark_arm(d)
+                    self.counters.add("kv_proactive_spills", 1)
         sig = self._progress_signature()
         if sig != self._progress_mark:
             self._progress_mark = sig
             self._stall_rounds = 0
-            return
-        self._stall_rounds += 1
-        if self._stall_rounds >= self.ecfg.stall_evict_rounds \
-                and self._parked:
+        else:
+            self._stall_rounds += 1
+        stalled = self._stall_rounds >= self.ecfg.stall_evict_rounds
+        # Bypassed streams tick the GLOBAL progress clock (their tokens and
+        # frees are progress) without ever feeding the head's need domains —
+        # left alone they would postpone the very spill that unblocks the
+        # head, re-introducing the delay the bypass-safety bound rules out.
+        # Once any bypass grant exists, the head's OWN wait drives the
+        # watchdog too: the head is unblocked at the same round or earlier
+        # than a no-bypass run, never later.
+        head_stalled = (not stalled
+                        and self.counters.totals.get("kv_bypass_grants",
+                                                     0.0) > 0
+                        and self._head_wait >= self.ecfg.stall_evict_rounds)
+        if stalled and self._parked:
             if self.ecfg.evict_mode == "swap" and self._spill_youngest():
-                pass
+                self.counters.add("kv_watchdog_spills", 1)
             else:
                 self._evict_youngest()
             self._stall_rounds = 0
+            self._head_wait = 0
+        elif head_stalled and self._parked:
+            # the head-wait rung frees pages the head can actually USE: a
+            # parked grower regrows only in its own domain, so the victim
+            # must hold pages there (a spilled or admission head restores
+            # anywhere — any domain's coldest park will do).  Never spill
+            # the head itself: that would demote it to the back of the
+            # line, manufacturing the starvation this rung prevents.
+            hr = self._head_rec()
+            dom = None
+            if hr is not None and hr.req.table is not None \
+                    and hr.req.table.spill is None:
+                dom = hr.req.table.domain
+            ex = hr.req.rid if hr is not None else None
+            if self.ecfg.evict_mode == "swap" and (
+                    self._spill_parked(domain=dom, exclude_rid=ex)
+                    or (dom is not None
+                        and self._spill_parked(domain=None, exclude_rid=ex))):
+                self.counters.add("kv_watchdog_spills", 1)
+            self._head_wait = 0
 
     def _spill_youngest(self) -> bool:
         """Swap-tier deadlock breaker: move the most-recently-parked
@@ -880,17 +1194,36 @@ class ServeEngine:
         restart-eviction would have sent its re-admission.  False when
         every parked stream is already host-resident (nothing left to
         spill — the caller falls back to restart eviction)."""
+        return self._spill_parked(domain=None)
+
+    def _spill_parked(self, domain: Optional[int],
+                      exclude_rid: Optional[int] = None) -> bool:
+        """Spill the most-recently-parked spillable stream — pool-wide for
+        the stall watchdog, or restricted to ``domain`` for the proactive
+        watermark rung and the head-wait rung (which also excludes the
+        line head itself via ``exclude_rid``).  The victim rule is shared:
+        the youngest park re-queues at the back of the line either way, so
+        of all parked streams its pages are the COLDEST — the last the
+        line will ask for.  False when nothing in scope is left to
+        spill."""
         cands = [r for r in self._parked.values()
                  if r.req.table is not None and r.req.table.spill is None
-                 and r.req.table.blocks]
+                 and r.req.table.blocks
+                 and r.req.rid != exclude_rid
+                 and (domain is None or r.req.table.domain == domain)]
         if not cands:
             return False
         rec = max(cands, key=lambda r: r.seq)
         task = rec.cell.get("task")
         if task is not None:
             # demote BEFORE spilling: the spill's free callback wakes the
-            # line head, which must be the next waiter — not the victim
-            self.waiters.to_back(task)
+            # line head, which must be the next waiter — not the victim.
+            # The fresh seq retires any arrival-position claim a bypassed
+            # victim held: it consumed its turn
+            ns = self.waiters.to_back(task)
+            if ns is not None:
+                rec.req.wq_seq = ns
+                self._wait_round[task.id] = self._round
         self.pool.spill(rec.req.table)  # frees pages -> wakes the line head
         rec.seq = next(self._park_seq)  # its park is "fresh" again
         return True
@@ -909,19 +1242,25 @@ class ServeEngine:
         task = rec.cell.get("task")
         if task is not None:
             self.waiters.remove(task)
+            self._wait_round.pop(task.id, None)
             self.runtime.unblock(task)  # let the generator observe .evicted
         req = rec.req
         self.pool.free(req.table)       # wakes the longest-parked waiter
         req.table = None
         req.generated = []
         req.t_first = None
+        req.bypassed = False            # the restart is a fresh admission
         self.counters.add("kv_evictions", 1)
         self.counters.add("recompute_tokens", rec.pos)
-        cell: Dict[str, Any] = {}
+        cell: Dict[str, Any] = {"req": req}
         cell["task"] = self.sched.spawn(
             self._admission_task(req, cell), name=f"readmit{req.rid}",
             priority=1)
-        self.waiters.park(cell["task"])  # back of the line: it had its turn
+        # back of the line: it had its turn (and that demotion replaces
+        # any arrival-position claim for future parks)
+        req.wq_seq = self._join_line(cell["task"])
+        if self._bypass_wake and self.ecfg.slo_classes[req.cls].bypass:
+            self._bypass_cells[cell["task"].id] = cell
 
     # -- one engine tick: admit + mixed chunk/decode token step ---------------
     def _install(self, g: _Group, slot: int, fl: _InFlight):
@@ -1463,7 +1802,7 @@ class ServeEngine:
                  "mixed_tick_decode_rows_saved",
                  "kv_prefix_hits", "prefill_tokens_skipped",
                  "spec_tokens_drafted", "spec_tokens_accepted",
-                 "spec_rollbacks")
+                 "spec_rollbacks", "kv_bypass_grants", "kv_head_wait_ticks")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -1664,7 +2003,53 @@ class ServeEngine:
             self.pool.block_tokens,
             ckpts=int(tot.get("kv_spec_ckpts", 0.0)),
             rollbacks=int(s["spec_rollbacks"]))
+        # SLO-tiered admission: bypass volume, the priced safety floors
+        # those grants preserved for the blocked heads they jumped, the
+        # head-blocking exposure, the proactive-vs-watchdog spill split,
+        # and per-class admission counts + latency percentiles (computed
+        # from the very samples ``stats``/the benchmark report)
+        s["bypass_grants"] = tot.get("kv_bypass_grants", 0.0)
+        s["bypass_floor_pages"] = tot.get("kv_bypass_floor_pages", 0.0)
+        s["bypass_floor_bytes"] = kv_bypass_floor_bytes(
+            self.cfg, int(s["bypass_floor_pages"]), self.pool.block_tokens)
+        s["head_wait_ticks"] = tot.get("kv_head_wait_ticks", 0.0)
+        s["proactive_spills"] = tot.get("kv_proactive_spills", 0.0)
+        s["watchdog_spills"] = tot.get("kv_watchdog_spills", 0.0)
+        s["class_submits"] = {c: tot.get(f"kv_class_submits/{c}", 0.0)
+                              for c in self.ecfg.slo_classes}
+        s["class_admits"] = {c: tot.get(f"kv_class_admits/{c}", 0.0)
+                             for c in self.ecfg.slo_classes}
+        s["class_bypass_grants"] = {c: tot.get(f"kv_class_bypass/{c}", 0.0)
+                                    for c in self.ecfg.slo_classes}
+        s["per_class"] = self.class_stats(self.submitted,
+                                          self.ecfg.slo_classes)
         return s
+
+    @staticmethod
+    def class_stats(reqs: List[Request],
+                    slo_classes: Optional[Dict[str, ClassSLO]] = None
+                    ) -> Dict[str, Dict[str, float]]:
+        """Per-SLO-class latency stats over the SAME samples :meth:`stats`
+        reports — one ``stats`` dict per class, annotated with the class's
+        TTFT/TPOT targets and whether the p99s met them.  Classes with no
+        finished requests report ``{"n": 0}`` plus their targets."""
+        classes = sorted({r.cls for r in reqs} | set(slo_classes or ()))
+        out: Dict[str, Dict[str, float]] = {}
+        for c in classes:
+            sub = ServeEngine.stats([r for r in reqs if r.cls == c])
+            if not sub:
+                sub = {"n": 0}
+            if slo_classes and c in slo_classes:
+                slo = slo_classes[c]
+                sub["ttft_target"] = slo.ttft_target
+                sub["tpot_target"] = slo.tpot_target
+                if sub["n"]:
+                    sub["ttft_slo_met"] = bool(
+                        sub["ttft_p99"] <= slo.ttft_target)
+                    sub["tpot_slo_met"] = bool(
+                        sub["tpot_p99"] <= slo.tpot_target)
+            out[c] = sub
+        return out
 
     @staticmethod
     def stats(reqs: List[Request]) -> Dict[str, float]:

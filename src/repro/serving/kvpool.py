@@ -224,6 +224,12 @@ class KVBlockPool:
         self.peak_used_per_domain = [0] * n_domains
         self.active_tables = 0          # reservations currently live
         self.peak_active_tables = 0     # max concurrently admitted streams
+        # proactive-spill occupancy watermarks (None = disabled): a domain
+        # crossing HIGH is a candidate for ONE early spill; it re-arms only
+        # after dipping back under LOW (hysteresis against spill thrash)
+        self.wm_high: Optional[float] = None
+        self.wm_low: Optional[float] = None
+        self._wm_hot = [False] * n_domains
 
     # -- sizing helpers ----------------------------------------------------
     @staticmethod
@@ -296,6 +302,64 @@ class KVBlockPool:
             used = total - sum(len(f) for f in self._free_states)
             return used / total if total else 0.0
         return self.used_blocks() / total
+
+    def domain_occupancy(self, domain: int) -> float:
+        """Fraction of ONE domain's capacity in use (blocks, or state
+        slots for pure-state models) — the watermark ladder's input."""
+        if self.blocks_per_domain:
+            return self.used_blocks_in(domain) / self.blocks_per_domain
+        if self.states_per_domain:
+            return ((self.states_per_domain
+                     - len(self._free_states[domain]))
+                    / self.states_per_domain)
+        return 0.0
+
+    # -- proactive-spill watermarks ----------------------------------------
+    def set_watermarks(self, high: Optional[float],
+                       low: Optional[float] = None):
+        """Arm per-domain occupancy watermarks for PROACTIVE spill (the
+        ladder rung between park and the stall watchdog): a domain whose
+        occupancy reaches ``high`` reports itself via
+        :meth:`watermark_domains` so the engine can spill one cold parked
+        stream BEFORE the allocation stall closes into a deadlock; the
+        domain then stays latched (no further proactive spills) until it
+        dips back to ``low`` — the hysteresis that prevents spill/restore
+        thrash when freed pages are regranted immediately.  ``high=None``
+        disables (the watchdog-only default)."""
+        if high is None:
+            self.wm_high = self.wm_low = None
+            self._wm_hot = [False] * self.n_domains
+            return
+        low = high if low is None else low
+        if not (0.0 < low <= high <= 1.0):
+            raise ValueError(
+                f"watermarks need 0 < low <= high <= 1, got "
+                f"high={high} low={low}")
+        self.wm_high, self.wm_low = float(high), float(low)
+        self._wm_hot = [False] * self.n_domains
+
+    def watermark_domains(self) -> List[int]:
+        """Domains whose occupancy has crossed the HIGH mark since last
+        dipping under LOW — each is a candidate for one proactive spill.
+        Crossing does NOT latch by itself: the caller confirms an actual
+        spill with :meth:`watermark_arm` (a hot domain with nothing left
+        to spill must stay eligible for the next round)."""
+        out: List[int] = []
+        if self.wm_high is None:
+            return out
+        for d in range(self.n_domains):
+            occ = self.domain_occupancy(d)
+            if self._wm_hot[d]:
+                if occ <= self.wm_low:
+                    self._wm_hot[d] = False
+            elif occ >= self.wm_high:
+                out.append(d)
+        return out
+
+    def watermark_arm(self, domain: int):
+        """Latch a domain after a proactive spill: no further proactive
+        spills there until occupancy dips under the LOW mark."""
+        self._wm_hot[domain] = True
 
     def can_reserve(self, domain: int, pages: int) -> bool:
         if not self.state_available(domain):
@@ -562,6 +626,7 @@ class KVBlockPool:
     def reserve(self, domain: int, total_tokens: int, *,
                 first_tokens: Optional[int] = None,
                 headroom: int = 0,
+                min_free: int = 0,
                 count_failure: bool = True,
                 prefix_blocks: Optional[Sequence[int]] = None,
                 prefix_state: int = 0) -> Optional[KVTable]:
@@ -582,6 +647,13 @@ class KVBlockPool:
         place.  ``headroom=0`` is exactly the unguarded grant; the knob is
         clamped so an EMPTY domain can always admit (a too-large k must
         throttle, never livelock).
+
+        ``min_free`` is a HARD free-block floor the grant must leave
+        behind — the size-aware bypass safety bound: a request granted
+        past a blocked line head passes the head's provable restore/grow
+        need here, so the grant can never consume a page the head is
+        waiting for.  Unlike ``headroom`` it is NEVER clamped: a floor
+        that cannot be kept refuses the grant outright.
 
         ``count_failure=False`` lets a caller probing several domains count
         one logical failure instead of one per domain.
@@ -610,7 +682,8 @@ class KVBlockPool:
         cached = sum(1 for b in shared if self._ref.get(b, 0) == 0)
         headroom = min(headroom if pages else 0,
                        max(0, self.blocks_per_domain - pages))
-        if not self.can_reserve(domain, pages + cached + headroom):
+        if not self.can_reserve(domain, pages + cached + headroom
+                                + max(min_free, 0)):
             if count_failure:
                 self.counters.add("kv_alloc_failures", 1)
             return None

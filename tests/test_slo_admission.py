@@ -1,0 +1,602 @@
+"""SLO-tiered admission suite (ISSUE 9): request classes + size-aware
+bypass + proactive watermark spill.
+
+PR 9 replaces the wait line's FIFO-only grant rule with ONE relaxation: a
+``bypass``-class request may be granted past a PARKED line head when its
+charged pages provably fit inside the free pool minus the head's restore
+need (``_head_need_in`` / ``kv_bypass_floor_bytes``).  Everything here
+asserts the properties that make that relaxation free:
+
+  * token identity — for any arrival schedule x class mix x
+    oversubscription level, the bypass-on and bypass-off twins generate
+    IDENTICAL tokens (greedy decode is batch-composition independent, so
+    any divergence is an engine bug);
+  * no starvation — the head the first bypass jumped is re-granted at the
+    same round or EARLIER than in the FIFO twin (twin dynamics are
+    step-identical up to that first grant: the off engine still WAKES
+    bypass-class waiters, it just never grants them);
+  * exact pool accounting (``KVBlockPool.audit``) after every bypass
+    grant and every proactive / watchdog spill;
+  * the proactive watermark rung spills BEFORE the stall watchdog and the
+    low-mark hysteresis caps its spill volume;
+  * the per-class latency surfaces (``kv_stats()['per_class']``) are the
+    SAME samples ``ServeEngine.stats`` reports, just partitioned.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from conftest import hypothesis_tools
+from repro.configs import REGISTRY, reduced_config
+from repro.core.costmodel import kv_bypass_floor_bytes, kv_state_bytes, \
+    kv_token_bytes
+from repro.core.topology import ChipletTopology
+from repro.serving.engine import ClassSLO, EngineConfig, Request, \
+    ServeEngine
+from repro.serving.kvpool import KVBlockPool
+
+given, settings, st = hypothesis_tools()
+
+CFG = reduced_config(REGISTRY["llama3-8b"])
+
+
+def _engine(*, groups=2, max_batch=4, max_len=32, pool_streams=1,
+            evict_mode="swap", seed=0, **ecfg_kw):
+    topo = ChipletTopology(n_pods=1, groups_per_pod=groups,
+                           chips_per_group=1)
+    ecfg = EngineConfig(max_batch=max_batch, max_len=max_len, paged=True,
+                        lazy=True, pool_streams=pool_streams,
+                        adaptive=False, evict_mode=evict_mode, **ecfg_kw)
+    return ServeEngine(CFG, topo, ecfg, spread_rate=1, seed=seed)
+
+
+def _audit_instrument(eng):
+    """Audit the pool's exact accounting after EVERY reserve (bypass
+    grants included — the fresh table is not on a request yet, so it is
+    appended explicitly), spill and free.  Returns the audit counter."""
+    pool = eng.pool
+    hits = {"audits": 0}
+
+    def live():
+        return [r.table for r in eng.submitted if r.table is not None]
+
+    orig_reserve = pool.reserve
+
+    def reserve(*a, **kw):
+        t = orig_reserve(*a, **kw)
+        if t is not None:
+            pool.audit(live() + ([t] if t not in live() else []))
+            hits["audits"] += 1
+        return t
+
+    pool.reserve = reserve
+    for name in ("spill", "free", "restore"):
+        orig = getattr(pool, name)
+
+        def wrapped(table, _orig=orig):
+            out = _orig(table)
+            pool.audit(live())
+            hits["audits"] += 1
+            return out
+
+        setattr(pool, name, wrapped)
+    return hits
+
+
+def _drain(eng):
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "allocation deadlock"
+    return res
+
+
+def _mixed(seed, n, max_len, interactive_frac=2):
+    """Randomized (gap, prompt, max_new, cls) arrivals: bursty mixed-class
+    load — big ``batch`` growers that park under oversubscription and
+    small ``interactive`` arrivals behind them."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        if i and rng.integers(0, interactive_frac + 1):
+            plen = int(rng.integers(3, 7))
+            max_new = int(rng.integers(1, 5))
+            cls = "interactive"
+        else:
+            plen = int(rng.integers(4, max_len // 2))
+            max_new = int(rng.integers(max_len // 2, max_len - plen))
+            cls = "batch"
+        out.append((int(rng.integers(0, 4)),
+                    rng.integers(2, CFG.vocab, size=plen), max_new, cls))
+    return out
+
+
+def _twins(seed, *, n=None, audit=False, **ecfg_kw):
+    """One randomized schedule through the bypass engine and its FIFO
+    twin -> {True: eng, False: eng}."""
+    rng = np.random.default_rng(seed)
+    n = n if n is not None else int(rng.integers(4, 9))
+    groups = int(rng.integers(1, 3))
+    streams = int(rng.integers(1, 3))
+    sched = _mixed(seed, n, 32)
+    cells = {}
+    for bypass in (True, False):
+        eng = _engine(groups=groups, pool_streams=streams,
+                      slo_bypass=bypass, **ecfg_kw)
+        if audit:
+            eng._audits = _audit_instrument(eng)
+        eng.open_loop_client(list(sched))
+        _drain(eng)
+        cells[bypass] = eng
+    return cells
+
+
+def _tokens(eng):
+    return [r.generated for r in sorted(eng.submitted, key=lambda r: r.rid)]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance properties (randomized schedule x class mix x pressure)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_token_identity_bypass_on_off(seed):
+    """(a) tokens are identical with the bypass on and off, for any
+    schedule / class mix / oversubscription level — and the FIFO twin
+    never grants a bypass."""
+    cells = _twins(seed)
+    assert _tokens(cells[True]) == _tokens(cells[False])
+    assert cells[False].kv_stats()["bypass_grants"] == 0
+    assert cells[False].bypass_log == []
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_head_never_granted_later(seed):
+    """(b) no starvation: when the bypass fires, the head it jumped is
+    re-granted at the same round or EARLIER than in the FIFO twin.  The
+    comparison is exact because twin dynamics are step-identical up to
+    the first bypass grant."""
+    cells = _twins(seed)
+    on, off = cells[True], cells[False]
+    for r0, _rid, head_rid in on.bypass_log[:1]:
+        g_on = next((t for t in on.submitted[head_rid].grant_rounds
+                     if t >= r0), None)
+        g_off = next((t for t in off.submitted[head_rid].grant_rounds
+                      if t >= r0), None)
+        assert g_on is not None and g_off is not None, \
+            f"jumped head rid={head_rid} has no re-grant after {r0}"
+        assert g_on <= g_off, \
+            f"seed={seed}: bypass delayed head rid={head_rid}: " \
+            f"{g_on} vs {g_off}"
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_audit_after_every_grant_and_spill(seed):
+    """(c) ``KVBlockPool.audit`` passes after every reservation (bypass
+    grants included), spill, restore and free — on both twins — and the
+    drained pool audits clean."""
+    cells = _twins(seed, audit=True)
+    for eng in cells.values():
+        assert eng._audits["audits"] > 0
+        eng.pool.audit([])
+        assert eng.pool.occupancy() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# crafted bypass scenario (deterministic anchor for the property trio)
+# ---------------------------------------------------------------------------
+
+def _crafted(bypass, *, aging=None, audit=False):
+    """Three big batch growers congest two 1-stream domains; four 1-page
+    interactive arrivals are injected the moment a grower parks — the
+    canonical bypass window (a parked head pinned to its group, frees in
+    the other group useless to it)."""
+    rng = np.random.default_rng(7)
+    kw = {} if aging is None else {"slo_aging_rounds": aging}
+    eng = _engine(groups=2, max_len=32, pool_streams=1,
+                  slo_bypass=bypass, **kw)
+    # the profiler keeps a RING of recent samples; widen it so the
+    # early-run bypass deltas survive to the post-drain assertions
+    eng.counters.samples = collections.deque(maxlen=100000)
+    if audit:
+        eng._audits = _audit_instrument(eng)
+    for _ in range(3):
+        eng.submit(rng.integers(2, CFG.vocab, size=6), max_new=24,
+                   cls="batch")
+    sprompts = [rng.integers(2, CFG.vocab, size=4) for _ in range(4)]
+    orig, fired = eng._decode_tick, []
+
+    def spy(g):
+        if not fired and eng._parked:
+            for p in sprompts:
+                eng.submit(p, max_new=4, cls="interactive")
+            fired.append(True)
+        orig(g)
+
+    eng._decode_tick = spy
+    _drain(eng)
+    return eng
+
+
+def test_crafted_bypass_fires_and_head_unharmed():
+    on, off = _crafted(True, audit=True), _crafted(False)
+    kv_on, kv_off = on.kv_stats(), off.kv_stats()
+    assert kv_on["bypass_grants"] >= 1 and kv_off["bypass_grants"] == 0
+    assert kv_on["class_bypass_grants"]["interactive"] \
+        == kv_on["bypass_grants"]
+    assert kv_on["class_bypass_grants"]["batch"] == 0
+    assert _tokens(on) == _tokens(off)
+    # the priced safety floor the grants preserved for the jumped heads
+    assert kv_on["bypass_floor_bytes"] == kv_bypass_floor_bytes(
+        CFG, int(kv_on["bypass_floor_pages"]), on.pool.block_tokens)
+    # every bypass grant marked its request
+    byp = [r for r in on.submitted if r.bypassed]
+    assert len(byp) == kv_on["bypass_grants"]
+    assert all(r.cls == "interactive" for r in byp)
+    # the jumped head is re-granted no later than in the FIFO twin
+    r0, _, head_rid = on.bypass_log[0]
+    g_on = next(t for t in on.submitted[head_rid].grant_rounds if t >= r0)
+    g_off = next(t for t in off.submitted[head_rid].grant_rounds if t >= r0)
+    assert g_on <= g_off
+    # the counters surface in the profiler's StepSample stream too
+    assert sum(s.kv_bypass_grants for s in on.counters.samples) \
+        == kv_on["bypass_grants"]
+    assert sum(s.kv_head_wait_ticks for s in on.counters.samples) > 0
+    on.pool.audit([])
+
+
+def test_aging_backstop_suspends_bypass():
+    """``slo_aging_rounds=0`` makes every waiter "aged" the round after it
+    parks: the backstop suspends bypass and the line drains strictly FIFO
+    — same tokens, zero grants."""
+    on = _crafted(True, aging=0)
+    off = _crafted(False, aging=0)
+    assert on.kv_stats()["bypass_grants"] == 0
+    assert _tokens(on) == _tokens(off)
+
+
+# ---------------------------------------------------------------------------
+# class-SLO plumbing
+# ---------------------------------------------------------------------------
+
+def test_unknown_class_fails_fast_at_submit():
+    eng = _engine()
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        eng.submit(np.arange(2, 6, dtype=np.int32), max_new=2, cls="gold")
+    assert eng.submitted == [] and len(eng.waiters) == 0
+    custom = _engine(slo_classes={"realtime": ClassSLO(bypass=True)})
+    with pytest.raises(ValueError, match="realtime"):
+        custom.submit(np.arange(2, 6, dtype=np.int32), max_new=2)
+    with pytest.raises(ValueError, match="at least one class"):
+        _engine(slo_classes={})
+
+
+def test_per_class_percentiles_match_hand_built_traces():
+    """``class_stats`` partitions the SAME samples ``stats`` reports: the
+    per-class percentiles over hand-built tick traces equal a hand
+    percentile over that class's requests, plus the class targets and
+    met/missed flags."""
+    def req(rid, cls, arrived, t_first, t_done, n_tok):
+        r = Request(rid, np.arange(2, 6, dtype=np.int32), n_tok,
+                    arrived=arrived, cls=cls)
+        r.t_first, r.t_done = t_first, t_done
+        r.generated = list(range(n_tok))
+        assert r.done
+        return r
+
+    reqs = [req(0, "interactive", 0.0, 0.1, 0.3, 5),
+            req(1, "interactive", 1.0, 1.4, 1.5, 3),
+            req(2, "batch", 0.0, 2.0, 4.0, 9),
+            req(3, "batch", 1.0, 1.2, 6.0, 17)]
+    classes = {"interactive": ClassSLO(ttft_target=0.5, tpot_target=0.06,
+                                       bypass=True),
+               "batch": ClassSLO()}
+    per = ServeEngine.class_stats(reqs, classes)
+    for c in ("interactive", "batch"):
+        sub = [r for r in reqs if r.cls == c]
+        ttft = np.array([r.t_first - r.arrived for r in sub])
+        tpot = np.array([(r.t_done - r.t_first)
+                         / max(1, len(r.generated) - 1) for r in sub])
+        assert per[c]["n"] == len(sub)
+        assert per[c]["ttft_p50"] == pytest.approx(
+            float(np.percentile(ttft, 50)))
+        assert per[c]["ttft_p99"] == pytest.approx(
+            float(np.percentile(ttft, 99)))
+        assert per[c]["tpot_p50"] == pytest.approx(
+            float(np.percentile(tpot, 50)))
+        # the class partition IS the global stats restricted to the class
+        assert per[c]["tokens"] == ServeEngine.stats(sub)["tokens"]
+        for k in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99"):
+            assert per[c][k] == ServeEngine.stats(sub)[k]
+    # interactive: ttft_p99 = 0.4 < 0.5 target met; tpot_p99 = 0.05 met
+    assert per["interactive"]["ttft_slo_met"] is True
+    assert per["interactive"]["tpot_slo_met"] is True
+    # batch targets default to inf: always met
+    assert per["batch"]["ttft_target"] == float("inf")
+    assert per["batch"]["ttft_slo_met"] is True
+    # a class with no finished requests still reports its targets
+    per2 = ServeEngine.class_stats([reqs[2]], classes)
+    assert per2["interactive"]["n"] == 0
+    assert per2["interactive"]["ttft_target"] == 0.5
+
+
+def test_kv_stats_per_class_counters_consistent():
+    eng = _crafted(True)
+    kv = eng.kv_stats()
+    subs = {c: sum(1 for r in eng.submitted if r.cls == c)
+            for c in ("batch", "interactive")}
+    assert kv["class_submits"] == {"batch": 3.0, "interactive": 4.0}
+    assert kv["class_submits"]["batch"] == subs["batch"]
+    # every submit of a drained run was admitted (restart re-admissions
+    # can only add)
+    for c, n in subs.items():
+        assert kv["class_admits"][c] >= n
+    assert set(kv["per_class"]) == {"batch", "interactive"}
+    assert kv["per_class"]["interactive"]["n"] == 4
+
+
+def test_batch_only_workload_keeps_fifo_and_counters():
+    """Single-class workloads are untouched by the feature (default class
+    never bypasses): zero grants, FIFO admission order, and the twin
+    engines' KV counter totals are identical."""
+    sched = [(g, p, m) for g, p, m, _c in _mixed(3, 6, 32,
+                                                 interactive_frac=0)]
+    outs, kvs = {}, {}
+    for bypass in (True, False):
+        eng = _engine(groups=1, pool_streams=1, slo_bypass=bypass)
+        grants = []
+        orig_remove = eng.waiters.remove
+        eng.waiters.remove = lambda t: (grants.append(t.name),
+                                        orig_remove(t))
+        eng.open_loop_client(list(sched))
+        _drain(eng)
+        admits = [int(n[len("admit"):]) for n in grants
+                  if n.startswith("admit")]
+        assert admits == sorted(admits), "FIFO admission order broken"
+        outs[bypass] = _tokens(eng)
+        kvs[bypass] = eng.kv_stats()
+        assert kvs[bypass]["bypass_grants"] == 0
+    assert outs[True] == outs[False]
+    for k in ("spills", "restores", "head_wait_ticks",
+              "peak_active_tables"):
+        assert kvs[True][k] == kvs[False][k], k
+
+
+# ---------------------------------------------------------------------------
+# the wait line: bypassed parks re-enter at their arrival position
+# ---------------------------------------------------------------------------
+
+def test_bypassed_park_reenters_at_arrival_seq():
+    """Regression: a bypassed stream that later parks mid-flight re-joins
+    the wait line at its ORIGINAL arrival seq — not the back.  It jumped
+    the line once under the no-delay bound; parking must not also demote
+    it behind arrivals it legitimately preceded.  ``to_back`` demotion
+    stays reserved for spill victims, who consumed their turn."""
+    eng = _engine(groups=1, max_batch=2, pool_streams=4)
+
+    def waiter():
+        yield
+
+    # a later ARRIVAL is already in line at seq 10
+    later = eng.sched.spawn(waiter(), name="later")
+    eng.waiters.park(later, seq=10)
+
+    def parked_req(rid, bypassed, wq_seq):
+        req = Request(rid, np.arange(2, 8, dtype=np.int32), 12,
+                      cls="interactive" if bypassed else "batch")
+        req.table = eng.pool.reserve(0, 18, first_tokens=6)
+        assert req.table is not None
+        req.bypassed, req.wq_seq = bypassed, wq_seq
+        eng.submitted.append(req)
+        g = eng.groups[0]
+        g.slots[0], g.pos_h[0], g.tok_h[0] = req, 6, 3
+        eng._park_stream(g, 0)
+        return eng._parked[rid]
+
+    rec = parked_req(0, True, 4)            # bypassed: arrival seq 4 < 10
+    task = rec.cell["task"]
+    assert eng.waiters.seq_of(task) == 4
+    assert rec.req.wq_seq == 4
+    assert eng.waiters.oldest() is task     # ahead of the later arrival
+    # a spill demotes it to the BACK (fresh seq past every waiter)
+    assert eng._spill_parked(domain=None)
+    assert eng.waiters.seq_of(task) > 10
+    assert eng.waiters.oldest() is later
+    assert rec.req.wq_seq == eng.waiters.seq_of(task)
+    # a NON-bypassed park draws a fresh park-time seq (joins behind)
+    rec2 = parked_req(1, False, 4)
+    assert eng.waiters.seq_of(rec2.cell["task"]) > 10
+
+
+# ---------------------------------------------------------------------------
+# proactive watermark spill
+# ---------------------------------------------------------------------------
+
+def test_watermark_hysteresis_unit():
+    """Pool-level watermark ladder: a domain reports itself at the HIGH
+    mark, ``watermark_arm`` latches it after a confirmed spill, and it
+    re-arms only under the LOW mark."""
+    probe = KVBlockPool(CFG, n_domains=1, max_len=32,
+                        blocks_per_domain=64, states_per_domain=4)
+    pp = probe.pages_needed(32)             # pages one full stream holds
+    pool = KVBlockPool(CFG, n_domains=1, max_len=32,
+                       blocks_per_domain=2 * pp, states_per_domain=4)
+    pool.set_watermarks(0.45, 0.2)
+    assert pool.watermark_domains() == []
+    t1 = pool.reserve(0, 32, first_tokens=None)
+    assert pool.occupancy() == pytest.approx(0.5)
+    assert pool.watermark_domains() == [0]
+    # crossing does not latch by itself: still eligible next round
+    assert pool.watermark_domains() == [0]
+    pool.watermark_arm(0)
+    assert pool.watermark_domains() == []   # latched
+    t2 = pool.reserve(0, 32, first_tokens=None)
+    assert pool.watermark_domains() == []   # still latched at occupancy 1.0
+    pool.free(t2)
+    assert pool.watermark_domains() == []   # 0.5 > LOW: hysteresis holds
+    pool.free(t1)
+    # the dip under LOW is observed by the per-round poll: this call
+    # re-arms the domain (and reports nothing at 0.0 occupancy)
+    assert pool.watermark_domains() == []
+    t3 = pool.reserve(0, 32, first_tokens=None)
+    assert pool.watermark_domains() == [0]  # eligible again
+    pool.free(t3)
+    with pytest.raises(ValueError, match="watermarks"):
+        pool.set_watermarks(0.5, 0.8)
+    pool.set_watermarks(None)               # disabled: never reports
+    t4 = pool.reserve(0, 32, first_tokens=None)
+    assert pool.watermark_domains() == []
+    pool.free(t4)
+    pool.audit([])
+
+
+def _pressure_engine(*, watermarks, seed=2, n=4, audit=False):
+    rng = np.random.default_rng(seed)
+    eng = _engine(groups=1, max_batch=4, pool_streams=1,
+                  spill_watermarks=watermarks)
+    if audit:
+        eng._audits = _audit_instrument(eng)
+    sched = [(int(rng.integers(0, 2)),
+              rng.integers(2, CFG.vocab, size=int(rng.integers(4, 8))),
+              int(rng.integers(12, 24)), "batch") for _ in range(n)]
+    eng.open_loop_client(sched)
+    _drain(eng)
+    return eng
+
+
+def test_proactive_spill_fires_before_watchdog():
+    """The watermark rung sheds the coldest parked stream BEFORE the
+    stall watchdog can fire, token-identically, with clean accounting —
+    and the hysteresis keeps total spill volume at or under the
+    watchdog-only run's on the same schedule."""
+    pro = _pressure_engine(watermarks=(0.75, 0.5), audit=True)
+    dog = _pressure_engine(watermarks=None)
+    kv_p, kv_d = pro.kv_stats(), dog.kv_stats()
+    assert kv_p["proactive_spills"] >= 1
+    assert kv_d["proactive_spills"] == 0 and kv_d["watchdog_spills"] >= 1
+    # acting at the watermark pre-empts the stall: the proactive run
+    # needs strictly fewer watchdog rescues
+    assert kv_p["watchdog_spills"] < kv_d["watchdog_spills"]
+    assert kv_p["spills"] <= kv_d["spills"]
+    assert _tokens(pro) == _tokens(dog)
+    assert sum(s.kv_spilled_pages for s in pro.counters.samples) >= 1
+    pro.pool.audit([])
+
+
+def test_proactive_spill_mid_prefill_victim_token_identical():
+    """A proactive victim parked MID-PREFILL restores at its partial
+    chunk cursor: tokens identical to the watermark-off twin."""
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, CFG.vocab, size=20) for _ in range(3)]
+    outs = {}
+    for marks in ((0.7, 0.4), None):
+        eng = _engine(groups=1, max_batch=4, pool_streams=1, max_len=48,
+                      spill_watermarks=marks, prefill_chunk=4)
+        picked = []
+        orig = eng._spill_parked
+
+        def spy(domain, exclude_rid=None, _e=eng, _o=orig, _p=picked):
+            before = {rid: rec.pos for rid, rec in _e._parked.items()
+                      if rec.req.table is not None
+                      and rec.req.table.spill is None}
+            out = _o(domain, exclude_rid)
+            if out:
+                after = {rid for rid, rec in _e._parked.items()
+                         if rec.req.table is not None
+                         and rec.req.table.spill is None}
+                for rid, pos in before.items():
+                    if rid not in after:
+                        _p.append((rid, pos,
+                                   len(_e.submitted[rid].prompt)))
+            return out
+
+        eng._spill_parked = spy
+        for p in prompts:
+            eng.submit(p, max_new=16, cls="batch")
+        _drain(eng)
+        outs[marks] = _tokens(eng)
+        if marks is not None:
+            assert eng.kv_stats()["proactive_spills"] >= 1
+            assert any(pos < plen for _rid, pos, plen in picked), \
+                "no proactive victim was parked mid-prefill"
+    assert outs[(0.7, 0.4)] == outs[None]
+
+
+def test_proactive_spill_hybrid_state_slot_victim():
+    """A hybrid (recurrent + attention) victim's proactive spill carries
+    its STATE slot through the swap tier.  State slots and token pages
+    are budgeted jointly (``pool_streams`` sizes both), so the engine can
+    never oversubscribe pages on its own: a mid-decode park is FORCED at
+    a fixed cursor in both twins, and the watermark twin must then shed
+    it proactively — state riding the host payload — and restore
+    token-identically against both the no-watermark twin and an unforced
+    baseline."""
+    cfg = reduced_config(REGISTRY["recurrentgemma-9b"])
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(2, cfg.vocab, size=6) for _ in range(3)]
+    outs = {}
+    for mode in ("marks", "plain", "baseline"):
+        topo = ChipletTopology(n_pods=1, groups_per_pod=1,
+                               chips_per_group=1)
+        ecfg = EngineConfig(max_batch=4, max_len=32, paged=True, lazy=True,
+                            pool_streams=2, adaptive=False,
+                            evict_mode="swap",
+                            spill_watermarks=((0.2, 0.1)
+                                              if mode == "marks" else None))
+        eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=0)
+        spill_states = []
+        orig_spill = eng.pool.spill
+
+        def spy_spill(t, _o=orig_spill, _s=spill_states):
+            out = _o(t)
+            _s.append(bool(t.spill is not None and t.spill.had_state))
+            return out
+
+        eng.pool.spill = spy_spill
+        if mode != "baseline":
+            orig_tick = eng._decode_tick
+            forced = {"parked": False}
+
+            def tick(g, _e=eng, _o=orig_tick, _f=forced):
+                out = _o(g)
+                if not _f["parked"]:
+                    for i, r in enumerate(g.slots):
+                        if r is not None and \
+                                int(g.pos_h[i]) >= len(r.prompt) + 4:
+                            _e._park_stream(g, i)
+                            _f["parked"] = True
+                            break
+                return out
+
+            eng._decode_tick = tick
+        for p in prompts:
+            eng.submit(p, max_new=20, cls="batch")
+        _drain(eng)
+        outs[mode] = _tokens(eng)
+        kv = eng.kv_stats()
+        if mode == "marks":
+            assert kv["proactive_spills"] >= 1
+            assert spill_states and all(spill_states), \
+                "hybrid spill payload must carry the state slot"
+        assert kv["recompute_tokens"] == 0
+        eng.pool.audit([])
+    assert outs["marks"] == outs["plain"] == outs["baseline"]
+
+
+# ---------------------------------------------------------------------------
+# the priced safety floor
+# ---------------------------------------------------------------------------
+
+def test_bypass_floor_bytes_prices_the_head_need():
+    bt = 8
+    assert kv_bypass_floor_bytes(CFG, 0, bt) == 0.0
+    assert kv_bypass_floor_bytes(CFG, -3, bt) == 0.0
+    one = kv_bypass_floor_bytes(CFG, 1, bt)
+    assert one == bt * kv_token_bytes(CFG)
+    assert kv_bypass_floor_bytes(CFG, 5, bt) == 5 * one
+    hyb = reduced_config(REGISTRY["recurrentgemma-9b"])
+    assert kv_bypass_floor_bytes(hyb, 2, bt, with_state=True) \
+        == 2 * bt * kv_token_bytes(hyb) + kv_state_bytes(hyb)
+    assert kv_state_bytes(hyb) > 0
