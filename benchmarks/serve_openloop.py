@@ -84,6 +84,19 @@ the unshared baseline only.
         --chunk-kernel dense --no-split-ticks --smoke
     PYTHONPATH=src python benchmarks/serve_openloop.py --spec-decode \
         ngram --smoke                                                   # CI
+    PYTHONPATH=src python benchmarks/serve_openloop.py --async-swap \
+        --smoke                                                         # CI
+
+``--async-swap`` runs the ASYNC TWO-TIER MEMORY comparison instead: the
+transfer engine issues each victim's D2H spill and keeps decoding —
+pages re-grant only when the per-round poll (or a fence) lands the copy
+— against the synchronous swap twin on the same oversubscription
+schedule.  Gates, all asserted in-run: token identity, zero recomputed
+tokens, spill cycles actually happened, ``pool.audit()`` exact while
+transfers were in flight, and no added tpot_p50 vs the sync twin.  The
+report adds the overlap-efficiency surface: decode ticks run with bytes
+on the wire, overlap rounds per spill, fence-wait count, peak in-flight
+footprint and the costmodel-priced host-link seconds.
 """
 from __future__ import annotations
 
@@ -708,6 +721,133 @@ def run_spec_bench(args, cfg):
           f"{st_off['tpot_p50']*1e6:.0f}us off)")
 
 
+def oversub_schedule(seed: int, n: int, vocab: int, max_len: int):
+    """Dense arrivals at short gaps with generations sized to thrash a
+    1-stream/domain budget: the schedule that deterministically forces
+    spill/restore cycles (the PR-4 acceptance workload)."""
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(0, 2)),
+             rng.integers(2, vocab, size=4),
+             max(8, int(max_len * 0.55))) for _ in range(n)]
+
+
+def run_async_mode(args, cfg, *, async_swap: bool):
+    """One async-swap bench cell: a single replica group at a
+    1-stream/domain budget on the oversubscription schedule, with the
+    pool audited at EVERY transfer transition (issue / poll / fence) —
+    including while bytes are in flight."""
+    topo = ChipletTopology(n_pods=1, groups_per_pod=1, chips_per_group=1)
+    ecfg = EngineConfig(
+        max_batch=4, max_len=args.max_len, adaptive=False, lazy=True,
+        pool_streams=args.pool_streams, evict_mode="swap",
+        headroom=args.headroom, async_swap=async_swap,
+        spill_watermarks=(0.5, 0.25),
+        controller=ControllerConfig(scheduler_timer=8, threshold=64.0,
+                                    min_dwell=2))
+    eng = ServeEngine(cfg, topo, ecfg, spread_rate=1, seed=args.seed)
+    pool = eng.pool
+    audits = {"calls": 0, "inflight": 0}
+
+    def live():
+        return [r.table for r in eng.submitted if r.table is not None]
+
+    for name in ("spill_issue", "spill_poll", "spill_fence", "spill"):
+        orig = getattr(pool, name)
+
+        def wrapped(*a, _orig=orig, **kw):
+            out = _orig(*a, **kw)
+            if pool.inflight_tables():
+                audits["inflight"] += 1
+            pool.audit(live())
+            audits["calls"] += 1
+            return out
+
+        setattr(pool, name, wrapped)
+    sched = oversub_schedule(args.seed, max(6, args.requests // 2),
+                             cfg.vocab, args.max_len)
+    eng.open_loop_client(sched)
+    res = eng.run_until_done()
+    assert all(r.done for r in eng.submitted), "async bench deadlock"
+    assert eng.pool.inflight_tables() == 0, "transfer outlived the run"
+    return eng, res, audits
+
+
+def run_async_bench(args, cfg):
+    """The async two-tier memory headline (``--async-swap``): overlap the
+    swap tier's D2H/H2D transfers behind the token loop and charge them
+    nothing.  Gates, all asserted in-run: token identity vs the
+    synchronous twin on the same schedule, ``recompute_tokens == 0``,
+    spill cycles actually happened, ``pool.audit()`` exact WHILE
+    transfers were in flight, and a tpot_p50 no worse than the sync twin
+    (generous 1.5x factor — interpret-mode CPU timings are noisy)."""
+    cells = {}
+    for is_async in (True, False):
+        tag = "async" if is_async else "sync"
+        eng, res, audits = run_async_mode(args, cfg, async_swap=is_async)
+        st = ServeEngine.stats(eng.submitted)
+        kv = eng.kv_stats()
+        toks = [r.generated for r in
+                sorted(eng.submitted, key=lambda r: r.rid)]
+        cells[tag] = (st, kv, toks, audits, eng)
+        emit([row(f"openloop_tpot_p50[{tag}-swap]", st["tpot_p50"] * 1e6,
+                  f"p99={st['tpot_p99']*1e6:.0f}us spills={kv['spills']:.0f}"
+                  f" restores={kv['restores']:.0f} "
+                  f"recompute={kv['recompute_tokens']:.0f}")])
+    st_a, kv_a, toks_a, audits_a, eng_a = cells["async"]
+    st_s, kv_s, toks_s, _, _ = cells["sync"]
+    # overlap efficiency: decode ticks that ran with bytes on the wire,
+    # rounds each landed spill hid behind, fences that actually waited,
+    # peak in-flight footprint, and the priced host-link time
+    peak_pages = max((s.kv_spill_inflight_pages
+                      for s in eng_a.counters.samples), default=0.0)
+    peak_bytes = max((s.kv_spill_inflight_bytes
+                      for s in eng_a.counters.samples), default=0.0)
+    emit([
+        # NB on CPU CI the D2H gather is ready instantly, so every issue
+        # lands at the NEXT round's poll: the engine advances exactly one
+        # full round per spill without blocking (overlap_rounds/spill =
+        # 1.0) and decode ticks rarely land inside that one-round window.
+        # On hardware where the copy takes many rounds, ticks_while_
+        # inflight counts the decode work the transfer actually hid behind.
+        row("async_swap_overlap_ticks", kv_a["ticks_while_inflight"],
+            f"decode ticks with a transfer in flight; "
+            f"overlap_rounds/spill={kv_a['overlap_rounds_per_spill']:.1f} "
+            f"fence_waits={kv_a['fence_waits']:.0f} "
+            f"issues={kv_a['spill_issues']:.0f}"),
+        row("async_swap_inflight_peak_bytes", peak_bytes,
+            f"peak_pages={peak_pages:.0f} "
+            f"prefetches={kv_a['restore_prefetches']:.0f} "
+            f"pinned_host={kv_a['swap_tier']['pinned_host']} "
+            f"tier_overflows={kv_a['swap_tier']['overflow_allocs']:.0f}"),
+        row("async_swap_link_us", (kv_a["d2h_seconds"]
+                                   + kv_a["h2d_seconds"]) * 1e6,
+            f"d2h={kv_a['d2h_bytes']:.0f}B h2d={kv_a['h2d_bytes']:.0f}B "
+            f"priced at the host-link bw (overlapped behind the loop)"),
+    ])
+    # gate 1: token identity against the synchronous twin
+    assert toks_a == toks_s, "async/sync swap token divergence"
+    # gate 2: the swap tier still never recomputes
+    assert kv_a["recompute_tokens"] == 0 and kv_s["recompute_tokens"] == 0
+    # gate 3: the schedule actually exercised spill cycles, and every
+    # issue landed exactly once
+    assert kv_a["spills"] >= 1, "oversubscription never spilled"
+    assert kv_a["spill_issues"] == kv_a["spills"], \
+        "issued transfers did not all land"
+    # gate 4: accounting stayed exact WITH transfers in flight (the
+    # audit wrapper runs at every issue/poll/fence)
+    assert audits_a["calls"] > 0 and audits_a["inflight"] > 0, \
+        "audit never observed an in-flight transfer"
+    # gate 5: overlap must not add decode latency vs the sync twin
+    assert st_a["tpot_p50"] <= st_s["tpot_p50"] * 1.5, \
+        f"async tpot_p50 {st_a['tpot_p50']*1e6:.0f}us regressed vs " \
+        f"sync {st_s['tpot_p50']*1e6:.0f}us"
+    print(f"async swap token-identical: True (spills={kv_a['spills']:.0f} "
+          f"overlapped ticks={kv_a['ticks_while_inflight']:.0f}, "
+          f"fence_waits={kv_a['fence_waits']:.0f}, tpot_p50 "
+          f"async={st_a['tpot_p50']*1e6:.0f}us "
+          f"sync={st_s['tpot_p50']*1e6:.0f}us)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=48)
@@ -804,6 +944,11 @@ def main():
     ap.add_argument("--headroom", type=int, default=0,
                     help="admission headroom k: grant only when the "
                          "domain keeps k free blocks past the first chunk")
+    ap.add_argument("--async-swap", action="store_true",
+                    help="async two-tier memory comparison: spill/restore "
+                         "issued behind the token loop (issue/poll/fence) "
+                         "vs the synchronous swap twin on the same "
+                         "oversubscription schedule")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: few requests, fast")
     args = ap.parse_args()
@@ -812,6 +957,9 @@ def main():
         args.mean_gap = 1.0
 
     cfg = reduced_config(REGISTRY["llama3-8b"])
+    if args.async_swap:
+        run_async_bench(args, cfg)
+        return
     if args.slo_classes:
         run_slo_bench(args, cfg)
         return

@@ -193,6 +193,24 @@ def kv_spill_bytes(cfg: ModelConfig, pages: int, block_tokens: int,
             + (kv_state_bytes(cfg) if with_state else 0.0))
 
 
+def kv_transfer_seconds(n_bytes: float, bw: float) -> float:
+    """Wall-clock seconds one swap-tier transfer of ``n_bytes`` occupies
+    the host link at bandwidth ``bw`` (``HardwareSpec.d2h_bw`` /
+    ``h2d_bw``).  This is the window the async transfer engine has to hide
+    behind decode ticks: a spill is "free" when the victim's line wait
+    exceeds ``kv_transfer_seconds(kv_spill_bytes(...), d2h_bw)``."""
+    return float(n_bytes) / max(float(bw), 1.0)
+
+
+def kv_spill_transfer_seconds(cfg: ModelConfig, pages: int,
+                              block_tokens: int, bw: float,
+                              with_state: bool = True) -> float:
+    """One spill (or restore) priced on the host link: the swap-tier
+    payload of ``kv_spill_bytes`` moved at ``bw``."""
+    return kv_transfer_seconds(
+        kv_spill_bytes(cfg, pages, block_tokens, with_state), bw)
+
+
 def kv_bypass_floor_bytes(cfg: ModelConfig, head_need_pages: int,
                           block_tokens: int,
                           with_state: bool = False) -> float:

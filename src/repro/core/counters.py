@@ -75,6 +75,14 @@ class StepSample:
     # the wait line spent non-empty — deltas since the previous sample.
     kv_bypass_grants: float = 0.0
     kv_head_wait_ticks: float = 0.0
+    # Async swap tier: pages/bytes with a D2H spill issued but not yet
+    # fenced (gauges at sample time), decode ticks that ran with at least
+    # one transfer outstanding, and fences that actually had to wait
+    # (deltas) — the overlap-efficiency surface of the transfer engine.
+    kv_spill_inflight_pages: float = 0.0
+    kv_spill_inflight_bytes: float = 0.0
+    kv_ticks_while_inflight: float = 0.0
+    kv_fence_waits: float = 0.0
 
 
 class PerfCounters:
@@ -118,7 +126,11 @@ class PerfCounters:
                     spec_rollbacks: float = 0.0,
                     spec_accept_rate: float = 0.0,
                     kv_bypass_grants: float = 0.0,
-                    kv_head_wait_ticks: float = 0.0):
+                    kv_head_wait_ticks: float = 0.0,
+                    kv_spill_inflight_pages: float = 0.0,
+                    kv_spill_inflight_bytes: float = 0.0,
+                    kv_ticks_while_inflight: float = 0.0,
+                    kv_fence_waits: float = 0.0):
         self.add("steps", 1)
         self.add("local_bytes", local_bytes)
         self.add("remote_bytes", remote_bytes)
@@ -139,7 +151,11 @@ class PerfCounters:
                                        spec_tokens_accepted,
                                        spec_rollbacks, spec_accept_rate,
                                        kv_bypass_grants,
-                                       kv_head_wait_ticks))
+                                       kv_head_wait_ticks,
+                                       kv_spill_inflight_pages,
+                                       kv_spill_inflight_bytes,
+                                       kv_ticks_while_inflight,
+                                       kv_fence_waits))
 
     # -- Algorithm 1 inputs ---------------------------------------------------
     def event_counter(self, name: str = "remote_bytes") -> float:

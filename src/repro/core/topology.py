@@ -28,6 +28,9 @@ class HardwareSpec:
     ici_bw: float = 50e9                 # B/s per link
     ici_links: int = 4                   # 2D torus
     dcn_bw: float = 6.25e9               # B/s per chip, cross-pod
+    # host link (PCIe gen4 x16-class): the swap tier's D2H/H2D path
+    d2h_bw: float = 20e9                 # B/s device -> pinned host
+    h2d_bw: float = 20e9                 # B/s pinned host -> device
     # latency model for the Fig.3 analogue (seconds, one 512B message)
     lat_intra_group: float = 1e-6
     lat_intra_pod: float = 3e-6

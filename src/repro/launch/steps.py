@@ -385,6 +385,43 @@ def make_spill_scatter(spec):
     return spill_scatter
 
 
+def make_spill_gather_async(spec):
+    """(storage, blocks, state_slot) -> DEVICE leaf list.  The issue half
+    of an asynchronous spill: same payload as ``make_spill_gather`` but
+    the gather only dispatches — the transfer engine polls ``.is_ready()``
+    and lands the bytes into the swap tier at the fence."""
+
+    def spill_gather_async(storage, blocks, state_slot=None):
+        return dec.extract_pool_entries_async(storage, spec, blocks,
+                                              state_slot=state_slot)
+
+    return spill_gather_async
+
+
+def make_rows_gather(spec):
+    """(storage, blocks, state_slots) -> device leaf list.  One batched
+    gather of MANY streams' pages + state slots — the spec-decode
+    checkpoint path, all drafted rows snapshotted in a single device
+    copy."""
+
+    def rows_gather(storage, blocks, state_slots=()):
+        return dec.gather_pool_rows(storage, spec, blocks,
+                                    state_slots=state_slots)
+
+    return rows_gather
+
+
+def make_rows_scatter(spec):
+    """(storage, blocks, leaves, state_slots) -> storage'.  Batched
+    inverse of ``make_rows_gather`` for the rows that roll back."""
+
+    def rows_scatter(storage, blocks, leaves, state_slots=()):
+        return dec.scatter_pool_rows(storage, spec, blocks, leaves,
+                                     state_slots=state_slots)
+
+    return rows_scatter
+
+
 def make_prefix_fork(spec):
     """(storage, src_blocks, dst_blocks[, src_state, dst_state]) ->
     storage'.  The device-side copy behind prefix-sharing copy-on-write:

@@ -338,6 +338,108 @@ def insert_pool_entries(pool, spec: CacheViewSpec, blocks, host_leaves,
     return jax.tree.unflatten(spec.treedef, out)
 
 
+def extract_pool_entries_async(pool, spec: CacheViewSpec, blocks,
+                               state_slot: Optional[int] = None):
+    """Gather physical pages (and optionally a state slot) out of the pool
+    as DEVICE arrays — the issue half of an asynchronous swap-tier spill.
+
+    Same leaf-list contract as ``extract_pool_entries`` but without the
+    blocking ``np.asarray``: the gather dispatches and returns immediately
+    (JAX async dispatch), so decode ticks keep running while the copy
+    drains.  The gather snapshots the pool's CURRENT leaf values — the
+    functional storage update means later pool writes land in NEW arrays,
+    so the payload stays exactly the issue-time bytes.  Poll completion
+    with ``.is_ready()`` per leaf; ``np.asarray`` after that is the cheap
+    landed-copy read (on TPU, stage through a pinned-host buffer)."""
+    blk = jnp.asarray(list(blocks), jnp.int32)
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        if s.token_axis is not None:
+            out.append(jnp.take(leaf, blk, axis=ax) if blk.size else None)
+        else:
+            out.append(jnp.take(leaf, jnp.asarray([state_slot]), axis=ax)
+                       if state_slot is not None else None)
+    return out
+
+
+def gather_pool_rows(pool, spec: CacheViewSpec, blocks, state_slots=()):
+    """ONE batched device gather of many streams' pages + state slots —
+    the spec-decode checkpoint path (every drafted row snapshots its
+    write-touched pages per tick; per-row gathers cost a host round-trip
+    each).  ``blocks`` is the concatenation of all rows' page ids,
+    ``state_slots`` one slot per hybrid row.  Returns device arrays (no
+    host copy — rollback scatters them straight back; most checkpoints
+    are dropped untouched when the draft fully accepts).  Blocks are
+    padded to a pow-2 bucket with null-block gathers so the compiled-
+    shape count stays bounded; callers slice rows by offset and never
+    read the pad."""
+    blocks = list(blocks)
+    n_real = len(blocks)
+    if blocks:
+        bucket = 1 << (n_real - 1).bit_length()
+        blocks = blocks + [0] * (bucket - n_real)
+    blk = jnp.asarray(blocks, jnp.int32)
+    slots = jnp.asarray(list(state_slots), jnp.int32)
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        if s.token_axis is not None:
+            out.append(jnp.take(leaf, blk, axis=ax) if blk.size else None)
+        else:
+            out.append(jnp.take(leaf, slots, axis=ax) if slots.size
+                       else None)
+    return out
+
+
+def scatter_pool_rows(pool, spec: CacheViewSpec, blocks, leaves,
+                      state_slots=()):
+    """Inverse of ``gather_pool_rows`` for the rows that ROLL BACK: one
+    batched scatter of the rejected rows' pages (``leaves`` token entries
+    sized exactly ``len(blocks)`` at the block axis — the caller slices
+    real rows out of the bucketed gather) and their state slots."""
+    blk = jnp.asarray(list(blocks), jnp.int32)
+    slots = jnp.asarray(list(state_slots), jnp.int32)
+    out = []
+    for leaf, vals, s in zip(jax.tree.leaves(pool), leaves, spec.leaves):
+        ax = s.batch_axis
+        idx = (slice(None),) * ax
+        if s.token_axis is not None:
+            if blk.size and vals is not None:
+                leaf = leaf.at[idx + (blk,)].set(jnp.asarray(vals))
+        elif slots.size and vals is not None:
+            leaf = leaf.at[idx + (slots,)].set(jnp.asarray(vals))
+        out.append(leaf)
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def place_block_pool(pool, spec: CacheViewSpec, devices=None):
+    """Commit pool storage onto physical devices — the placement half of
+    the two-tier hierarchy.
+
+    Single device (CPU CI, one-chip dev box): a committed ``device_put``
+    — placement is explicit rather than inherited from whatever the first
+    jit happened to choose.  Multiple devices: shard every leaf's
+    block/slot axis across the chiplet group's devices when it divides
+    evenly (domain block-id ranges are contiguous, so each group's pages
+    land on its own devices), replicating leaves that don't divide."""
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) <= 1:
+        return jax.device_put(pool, devices[0])
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    import numpy as np
+    mesh = Mesh(np.array(devices), ("groups",))
+    out = []
+    for leaf, s in zip(jax.tree.leaves(pool), spec.leaves):
+        ax = s.batch_axis
+        if leaf.shape[ax] % len(devices) == 0:
+            ps = PartitionSpec(*((None,) * ax + ("groups",)))
+        else:
+            ps = PartitionSpec()
+        out.append(jax.device_put(leaf, NamedSharding(mesh, ps)))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
 def select_streams(spec: CacheViewSpec, mask, new_cache, old_cache):
     """Per-stream cache select: leaves of ``new_cache`` where ``mask`` (B,)
     is True, ``old_cache`` elsewhere — broadcast along each leaf's stream

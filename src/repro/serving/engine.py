@@ -105,8 +105,8 @@ from repro.core.topology import ChipletTopology
 from repro.models import decode as dec
 from repro.models.params import init_params
 from repro.core.costmodel import kv_bypass_floor_bytes, \
-    prefill_chunk_bytes, prefill_chunk_score_bytes, spec_rejected_bytes, \
-    spec_rollback_bytes
+    kv_transfer_seconds, prefill_chunk_bytes, prefill_chunk_score_bytes, \
+    spec_rejected_bytes, spec_rollback_bytes
 from repro.launch.steps import make_prefill, make_serve_chunk_step, \
     make_serve_step, make_spec_verify_step
 from repro.serving.kvpool import KVBlockPool, KVTable, kv_bytes_exact
@@ -283,6 +283,16 @@ class EngineConfig:
                                        # a domain that spilled at high
                                        # re-arms only under low.  None =
                                        # watchdog-only (the PR-4 ladder)
+    async_swap: bool = False           # overlap spills behind the token
+                                       # loop: the pressure ladder ISSUES
+                                       # the D2H copy and keeps ticking,
+                                       # landing it (and re-granting the
+                                       # victim's pages) at a later poll;
+                                       # fences only on shutdown, relayout
+                                       # or a genuinely stalled watchdog.
+                                       # False = the PR-4 synchronous
+                                       # spill (issue + immediate fence,
+                                       # byte-identical payload)
     controller: ControllerConfig = dataclasses.field(
         default_factory=lambda: ControllerConfig(
             scheduler_timer=8, threshold=4.0, min_dwell=2))
@@ -382,6 +392,7 @@ class ServeEngine:
         self.relayouts: List[Dict] = []
         self.pool: Optional[KVBlockPool] = None
         self._lazy = ecfg.paged and ecfg.lazy
+        self._async = bool(ecfg.paged and ecfg.async_swap)
         if ecfg.evict_mode not in ("swap", "restart"):
             raise ValueError(f"unknown evict_mode {ecfg.evict_mode!r}")
         if ecfg.prefill_mode not in ("parallel", "scan"):
@@ -426,7 +437,8 @@ class ServeEngine:
             self.pool = KVBlockPool(
                 cfg, n_domains=topology.total_groups, max_len=ecfg.max_len,
                 block_tokens=ecfg.block_tokens, counters=self.counters,
-                retention=ecfg.cached_retention, **budget)
+                retention=ecfg.cached_retention, topology=topology,
+                **budget)
             self.waiters = WaitQueue(self.runtime)
             # wake ONE waiter per free: grants stay FIFO (a successful
             # admission cascades the wake to the next waiter itself).
@@ -829,6 +841,10 @@ class ServeEngine:
         old_groups = self.groups
         if new_layout.replicas == len(old_groups):
             return
+        if self.pool is not None:
+            # quiesce the transfer engine: tables must not be harvested or
+            # re-pointed with a D2H copy still on the wire
+            self.pool.drain()
         # harvest in-flight streams and queued requests from the dissolving
         # groups; in paged mode KV stays in the pool (tables move, data
         # does not — except used pages of rebalanced streams).  Streams
@@ -1050,7 +1066,18 @@ class ServeEngine:
         while True:
             if rec.evicted:
                 return
+            if req.table is not None and req.table.inflight:
+                # our own spill is still on the wire: the fence-before-
+                # regrant invariant freezes the table until it lands (the
+                # landing's free callback wakes the line head)
+                yield BLOCK
+                continue
             if self.waiters.oldest() is not rec.cell["task"]:
+                if self._async and req.table.spill is not None:
+                    # not our turn yet: stage the H2D upload behind the
+                    # ticks ahead of us so the eventual re-grant scatters
+                    # device-resident arrays instead of waiting on PCIe
+                    self.pool.restore_prefetch(req.table)
                 yield BLOCK             # not our turn: the grant cascade
                 continue                # (or a free) will wake the head
             if req.table.spill is not None:
@@ -1075,32 +1102,25 @@ class ServeEngine:
     def _restore_stream(self, rec: _Parked) -> Optional["_Group"]:
         """Re-grant a SPILLED stream: find a domain with room for its host
         pages PLUS the growth its next chunk needs (its own domain first —
-        re-pointing a host-resident table to any other is free), restore,
-        grow, and return the domain's owner group; None when no domain can
-        take it yet."""
+        re-pointing a host-resident table to any other is free) and land
+        it there in ONE atomic ``restore_into`` leg; None when no domain
+        can take it yet.  The old sweep re-pointed, restored and grew in
+        separate steps — a leg whose grow failed after the restore left
+        the stream half-granted in the wrong domain with its state
+        checkpoint consumed.  ``restore_into`` reserves pages + grow +
+        state slot all-or-nothing, so a failed leg has zero side effects
+        and the sweep just tries the next domain."""
         req = rec.req
         t = req.table
-        sp = t.spill
         n, _ = self._next_chunk_need(req, rec.pos)
-        grow_by = max(0, self.pool.pages_needed(rec.pos + n) - sp.pages)
+        grow_by = max(0, self.pool.pages_needed(rec.pos + n) - t.spill.pages)
         order = [t.domain] + [
             d for g in sorted(self.groups,
                               key=lambda gr: (gr.kv_pressure(), gr.gid))
             for d in self._domain_order(g) if d != t.domain]
         for d in order:
-            if self.pool.free_blocks(d) < sp.pages + grow_by:
-                continue
-            if self.pool.has_state and not self.pool.state_available(d):
-                continue
-            if not self.pool.migrate(t, d):     # spilled: free re-point
-                continue
-            if not self.pool.restore(t):
-                continue
-            if grow_by and not self.pool.grow(t, grow_by):
-                # defensive (free list was checked above): the stream
-                # re-parks as an ordinary parked-with-pages waiter
-                return None
-            return self._owner_group(t.domain)
+            if self.pool.restore_into(t, d, grow_by=grow_by):
+                return self._owner_group(t.domain)
         return None
 
     # -- allocation-stall watchdog (the incremental-allocation deadlock) -----
@@ -1109,7 +1129,11 @@ class ServeEngine:
         return (t.get("tokens_processed", 0.0)
                 + t.get("kv_reservations", 0.0)
                 + t.get("kv_lazy_grows", 0.0)
-                + t.get("kv_blocks_freed", 0.0))
+                + t.get("kv_blocks_freed", 0.0)
+                # an ISSUED spill is progress-in-motion: its frees are on
+                # the wire, so the watchdog must not fire again before the
+                # landing re-grants them
+                + t.get("kv_spill_issues", 0.0))
 
     def _stall_hook(self):
         """Called by the scheduler after every round.  If nothing has made
@@ -1120,6 +1144,11 @@ class ServeEngine:
         if self.pool is None:
             return
         self._round += 1
+        if self._async:
+            # poll phase of the ladder: land every transfer whose device
+            # arrays report ready — landings fire the free callback, so
+            # re-grants happen here, not at issue
+            self.pool.spill_poll()
         if len(self.waiters):
             # rounds the wait line spent non-empty: the head-blocking
             # exposure the size-aware bypass converts into admissions
@@ -1135,7 +1164,11 @@ class ServeEngine:
         # before the allocation stall can close into a watchdog-grade
         # deadlock (hysteresis: it re-arms only under the LOW mark)
         if self._parked:
+            infl = self.pool.inflight_domains() if self._async else set()
             for d in self.pool.watermark_domains():
+                if d in infl:
+                    continue            # its frees are already in the pipe:
+                                        # never double-spill a domain
                 if self._spill_parked(domain=d):
                     self.pool.watermark_arm(d)
                     self.counters.add("kv_proactive_spills", 1)
@@ -1158,7 +1191,12 @@ class ServeEngine:
                                                      0.0) > 0
                         and self._head_wait >= self.ecfg.stall_evict_rounds)
         if stalled and self._parked:
-            if self.ecfg.evict_mode == "swap" and self._spill_youngest():
+            if self._async and self.pool.inflight_tables():
+                # a spill is already on the wire: fence it instead of
+                # issuing another — the landing re-grants the victim's
+                # pages, which is exactly the progress the watchdog wants
+                self.pool.spill_fence()
+            elif self.ecfg.evict_mode == "swap" and self._spill_youngest():
                 self.counters.add("kv_watchdog_spills", 1)
             else:
                 self._evict_youngest()
@@ -1177,6 +1215,10 @@ class ServeEngine:
                     and hr.req.table.spill is None:
                 dom = hr.req.table.domain
             ex = hr.req.rid if hr is not None else None
+            if self._async and self.pool.inflight_tables():
+                self.pool.spill_fence()     # land the pipe before adding
+                self._head_wait = 0         # to it (same as the stalled
+                return                      # rung)
             if self.ecfg.evict_mode == "swap" and (
                     self._spill_parked(domain=dom, exclude_rid=ex)
                     or (dom is not None
@@ -1208,12 +1250,20 @@ class ServeEngine:
         spill."""
         cands = [r for r in self._parked.values()
                  if r.req.table is not None and r.req.table.spill is None
+                 and not r.req.table.inflight
                  and r.req.table.blocks
                  and r.req.rid != exclude_rid
                  and (domain is None or r.req.table.domain == domain)]
         if not cands:
             return False
-        rec = max(cands, key=lambda r: r.seq)
+        if self._async and domain is not None:
+            # async ladder, domain-scoped rungs: the §4.5 access counters
+            # pick the victim — min ``last_touch`` is the parked stream
+            # whose pages have gone longest without a decode tick, so its
+            # bytes are the cheapest to push behind the token loop
+            rec = min(cands, key=lambda r: (r.req.table.last_touch, r.seq))
+        else:
+            rec = max(cands, key=lambda r: r.seq)
         task = rec.cell.get("task")
         if task is not None:
             # demote BEFORE spilling: the spill's free callback wakes the
@@ -1224,7 +1274,13 @@ class ServeEngine:
             if ns is not None:
                 rec.req.wq_seq = ns
                 self._wait_round[task.id] = self._round
-        self.pool.spill(rec.req.table)  # frees pages -> wakes the line head
+        if self._async:
+            # issue-only: the D2H copy drains behind the token loop and
+            # the victim's pages re-grant at the poll that lands it
+            # (fence-before-regrant) — the wake fires there, not here
+            self.pool.spill_issue(rec.req.table)
+        else:
+            self.pool.spill(rec.req.table)  # frees pages -> wakes the head
         rec.seq = next(self._park_seq)  # its park is "fresh" again
         return True
 
@@ -1519,6 +1575,7 @@ class ServeEngine:
                 continue
             pos = int(g.pos_h[i])
             if req.table is not None and self.ecfg.paged:
+                self.pool.touch_table(req.table)
                 n, need = self._next_chunk_need(req, pos)
                 d = self._draft_for(req, pos) if self._spec else []
                 if d:
@@ -1563,6 +1620,10 @@ class ServeEngine:
             chunked = chunked or (n > 1 and i not in drafts)
         if not n_h.any():
             return
+        if self.ecfg.paged and self.pool.inflight_tables():
+            # the overlap clock: a real model tick ran with at least one
+            # D2H transfer on the wire — decode time the spill hid behind
+            self.counters.add("kv_ticks_while_inflight", 1)
         if self.ecfg.paged:
             tables, slots1 = self._group_indices(g)
         pos_j = jnp.asarray(g.pos_h)
@@ -1673,15 +1734,23 @@ class ServeEngine:
             # prefix to advance it.
             ring_w = self.pool.spec.width if self.pool.pages_per_stream \
                 else 0
-            snaps = {}
+            snap_rows: List[Tuple[KVTable, int, int, bool]] = []
+            snap_idx: List[int] = []
             for i in sorted(drafts):
                 p0, nn = int(g.pos_h[i]), int(n_h[i])
                 wraps = bool(ring_w) and p0 + nn > ring_w
                 if self.pool.has_state or wraps:
-                    snaps[i] = self.pool.checkpoint_pages(
-                        g.slots[i].table, p0, nn, pages=wraps)
+                    snap_rows.append((g.slots[i].table, p0, nn, wraps))
+                    snap_idx.append(i)
+            # ONE device gather snapshots every drafted row (PR-8
+            # leftover): the checkpoints stay device-resident — a full
+            # accept drops them without any host copy ever happening
+            snaps = dict(zip(snap_idx,
+                             self.pool.checkpoint_rows(snap_rows))) \
+                if snap_rows else {}
             spec_lg = self._spec_verify(g, toks, n_h, drafts)
             reapply: List[Tuple[int, int]] = []
+            rolled: List[dict] = []
             for i in sorted(drafts):
                 n = int(n_h[i])
                 am = np.argmax(spec_lg[i], axis=-1)
@@ -1699,9 +1768,11 @@ class ServeEngine:
                     if m == 0:
                         self.counters.add("spec_full_rejects", 1)
                     if i in snaps:
-                        self.pool.rollback_pages(g.slots[i].table,
-                                                 snaps[i])
+                        rolled.append(snaps[i])
                         reapply.append((i, m + 1))
+            if rolled:
+                # one batched scatter restores every rejected row
+                self.pool.rollback_rows(rolled)
             if reapply:
                 self._spec_reapply(g, toks, reapply)
             drafted = self.counters.totals.get("spec_tokens_drafted", 0.0)
@@ -1802,7 +1873,8 @@ class ServeEngine:
                  "mixed_tick_decode_rows_saved",
                  "kv_prefix_hits", "prefill_tokens_skipped",
                  "spec_tokens_drafted", "spec_tokens_accepted",
-                 "spec_rollbacks", "kv_bypass_grants", "kv_head_wait_ticks")
+                 "spec_rollbacks", "kv_bypass_grants", "kv_head_wait_ticks",
+                 "kv_ticks_while_inflight", "kv_fence_waits")
         state = {"t": self._clock()}
         state.update({n: self.counters.totals.get(n, 0.0) for n in names})
 
@@ -1816,7 +1888,12 @@ class ServeEngine:
                    "kv_shared_pages": float(self.pool.shared_pages()),
                    "kv_shared_bytes": self.pool.shared_bytes(),
                    "spec_accept_rate": self.counters.totals.get(
-                       "spec_accept_rate", 0.0)}
+                       "spec_accept_rate", 0.0),
+                   # transfer-engine gauges at sample time, not deltas
+                   "kv_spill_inflight_pages": float(
+                       self.pool.inflight_pages()),
+                   "kv_spill_inflight_bytes": float(
+                       self.pool.inflight_bytes())}
             for n in names[1:]:
                 out[n] = cur[n] - state[n]
             state.update(t=t1, **cur)
@@ -1836,6 +1913,8 @@ class ServeEngine:
                                       round_hook=self._stall_hook)
         finally:
             self._running = False
+            if self.pool is not None:
+                self.pool.drain()       # no transfer outlives the run
         out = {"concurrency": trace, "counters": self.counters.snapshot(),
                "relayouts": list(self.relayouts),
                "decisions": [dataclasses.asdict(x)
@@ -2015,6 +2094,19 @@ class ServeEngine:
         s["head_wait_ticks"] = tot.get("kv_head_wait_ticks", 0.0)
         s["proactive_spills"] = tot.get("kv_proactive_spills", 0.0)
         s["watchdog_spills"] = tot.get("kv_watchdog_spills", 0.0)
+        # async swap tier: overlap efficiency (decode ticks that ran with
+        # a transfer on the wire, rounds each landed spill hid behind,
+        # fences that actually waited) + the costmodel-priced time the
+        # host link spent moving spill payloads
+        s["async_swap"] = bool(self._async)
+        s["ticks_while_inflight"] = tot.get("kv_ticks_while_inflight", 0.0)
+        spills = max(1.0, s.get("spills", 0.0))
+        s["overlap_rounds_per_spill"] = (
+            tot.get("kv_spill_overlap_rounds", 0.0) / spills)
+        s["d2h_seconds"] = kv_transfer_seconds(
+            tot.get("kv_d2h_bytes", 0.0), self.topology.hw.d2h_bw)
+        s["h2d_seconds"] = kv_transfer_seconds(
+            tot.get("kv_h2d_bytes", 0.0), self.topology.hw.h2d_bw)
         s["class_submits"] = {c: tot.get(f"kv_class_submits/{c}", 0.0)
                               for c in self.ecfg.slo_classes}
         s["class_admits"] = {c: tot.get(f"kv_class_admits/{c}", 0.0)

@@ -71,13 +71,17 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, \
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.costmodel import kv_cache_bytes, kv_dedup_bytes, \
     kv_spill_bytes
 from repro.core.counters import PerfCounters
-from repro.launch.steps import make_prefix_fork, make_spill_gather, \
+from repro.launch.steps import make_prefix_fork, make_rows_gather, \
+    make_rows_scatter, make_spill_gather, make_spill_gather_async, \
     make_spill_scatter
 from repro.models import decode as dec
+from repro.serving.swap import InFlightSpill, SwapTier
 
 
 def kv_bytes_exact(cfg: ModelConfig, n_tokens: int, max_len: int) -> float:
@@ -96,6 +100,8 @@ class SpillEntry:
     pages: int                      # used pages held host-side
     data: List[Any]                 # host leaves from extract_pool_entries
     had_state: bool = False         # a state slot rides in ``data``
+    tier: Optional[Any] = None      # SwapTier handle backing ``data`` views
+    staged: Optional[List[Any]] = None  # H2D-prefetched device leaves
 
 
 @dataclasses.dataclass
@@ -138,6 +144,13 @@ class KVTable:
     used_pages: int = 0             # pages actually written (prefill/decode)
     cap_pages: int = 0              # lazy mode: max pages this stream needs
     spill: Optional[SpillEntry] = None   # host payload while spilled
+    inflight: bool = False          # D2H spill issued, fence pending: the
+    #                                 table still HOLDS its pages (regrant
+    #                                 happens only at the fence) and the
+    #                                 stream must not advance
+    last_touch: int = 0             # pool touch-clock at last decode tick
+    #                                 (§4.5 access counter: watermark
+    #                                 victims are the coldest-parked)
 
     @property
     def n_blocks(self) -> int:
@@ -160,7 +173,8 @@ class KVBlockPool:
                  blocks_per_domain: int, states_per_domain: int,
                  block_tokens: int = 16,
                  counters: Optional[PerfCounters] = None,
-                 retention: str = "access"):
+                 retention: str = "access",
+                 topology=None):
         if retention not in ("access", "blind"):
             raise ValueError(f"unknown retention policy {retention!r}")
         self.cfg = cfg
@@ -199,10 +213,35 @@ class KVBlockPool:
             n_blocks=1 + n_domains * self.blocks_per_domain,
             n_states=1 + n_domains * self.states_per_domain,
             block_tokens=self.block_tokens, max_len=max_len)
+        # physical placement: commit the pool onto its chiplet group's
+        # devices (domain block-id ranges are contiguous so an even shard
+        # of the block axis IS the per-group split; one device — CPU CI —
+        # commits everything there).  ``topology`` is advisory: the split
+        # follows the visible jax devices either way.
+        self.topology = topology
+        self.storage = dec.place_block_pool(self.storage, self.spec)
         self._on_free: List[Callable[[], None]] = []
-        # swap tier: D2H/H2D copies of a table's used pages + state slot
+        # swap tier: D2H/H2D copies of a table's used pages + state slot,
+        # landing in preallocated (pinned where the platform has it) host
+        # buffers sized to one full pool of pages
         self._spill_gather = make_spill_gather(self.spec)
         self._spill_scatter = make_spill_scatter(self.spec)
+        self._spill_gather_async = make_spill_gather_async(self.spec)
+        self._rows_gather = make_rows_gather(self.spec)
+        self._rows_scatter = make_rows_scatter(self.spec)
+        # The tier is sized to a multiple of the device pool: under
+        # oversubscription the AGGREGATE spilled footprint exceeds device
+        # capacity (that is the point of the second tier), so a 1x sizing
+        # overflows as soon as two pool-sized victims are parked at once.
+        self.swap = SwapTier(
+            self.storage, self.spec,
+            capacity_pages=4 * n_domains * self.blocks_per_domain,
+            capacity_states=4 * n_domains * self.states_per_domain)
+        # async transfer engine: issued-but-unfenced D2H spills.  An entry
+        # here means its table still holds pages (fence-before-regrant)
+        # and its stream is frozen at its park cursor.
+        self._inflight: List[InFlightSpill] = []
+        self._poll_clock = 0
         # prefix sharing: per-block refcounts (a block frees only when the
         # last table releases it), the hash-chain index of published
         # prompt pages, and its block -> key reverse map for invalidation.
@@ -728,6 +767,13 @@ class KVBlockPool:
         pool's free callback."""
         if n_pages <= 0:
             return True
+        if table.inflight:
+            # the victim is frozen until its D2H lands (fence-before-
+            # regrant): growing would advance a stream whose landed
+            # payload no longer matches.  Parks like a full domain; the
+            # landing's free callback retries.
+            self.counters.add("kv_grow_failures", 1)
+            return False
         cap = table.cap_pages or self.pages_per_stream
         if len(table.blocks) + n_pages > cap:
             raise ValueError(
@@ -749,7 +795,11 @@ class KVBlockPool:
         SPILLED table drops its host payload too (the restart-eviction
         fallback path).  Shared pages only DECREF — they stay resident for
         their other holders (and for future prefix matches: a page whose
-        last holder lets go parks on the free list still cached)."""
+        last holder lets go parks on the free list still cached).  A table
+        with a spill IN FLIGHT is fenced first — its payload lands, then
+        drops — so the transfer engine never references a dead table."""
+        if table.inflight:
+            self.spill_fence(table, count_wait=False)
         for b in sorted(table.blocks):
             self._release_block(b)
         if self.has_state and table.state_slot:
@@ -769,6 +819,136 @@ class KVBlockPool:
         self._on_free.append(cb)
 
     # -- swap tier: spill parked pages to host instead of discarding them --
+    #
+    # The transfer engine splits a spill into ISSUE / POLL / FENCE phases:
+    # ``spill_issue`` dispatches the device-side gather and returns
+    # immediately (JAX async dispatch — the D2H copy drains while decode
+    # ticks keep running); ``spill_poll`` lands every transfer whose
+    # arrays report ready; ``spill_fence`` blocks until specific (or all)
+    # transfers land.  The victim's pages are RE-GRANTED ONLY AT THE
+    # LANDING (fence-before-regrant): until then the table keeps its
+    # blocks and the free callbacks stay silent, so nobody can allocate a
+    # page whose bytes are still in motion.  The victim stream itself is
+    # frozen at its park cursor — the gather snapshotted issue-time bytes
+    # (functional storage update), so advancing the stream before the
+    # fence would decode against pages the landed payload no longer
+    # matches.  The synchronous ``spill`` is issue + immediate fence:
+    # byte-identical semantics to the PR-4 path for every existing caller.
+    def touch_table(self, table: KVTable):
+        """§4.5 access counter: stamp a table at every decode tick it ran
+        in.  Parked tables stop accumulating, so the coldest-parked victim
+        (min ``last_touch``) is the one whose pages have gone longest
+        without an access."""
+        self._touch_clock += 1
+        table.last_touch = self._touch_clock
+
+    def spill_issue(self, table: KVTable) -> int:
+        """Issue the D2H copy of a table's used pages (+ state slot) and
+        return immediately — the transfer drains behind the token loop.
+        Returns the pages now in flight (0 = already spilled or already
+        in flight)."""
+        if table.spill is not None or table.inflight:
+            return 0
+        used = min(table.used_pages, len(table.blocks))
+        had_state = bool(self.has_state and table.state_slot)
+        leaves = self._spill_gather_async(
+            self.storage, table.blocks[:used],
+            state_slot=table.state_slot if had_state else None)
+        rec = InFlightSpill(
+            table=table, pages=used, had_state=had_state, leaves=leaves,
+            issue_clock=self._poll_clock,
+            n_bytes=kv_spill_bytes(self.cfg, used, self.block_tokens,
+                                   had_state))
+        table.inflight = True
+        self._inflight.append(rec)
+        self.counters.add("kv_spill_issues", 1)
+        self.counters.add("kv_d2h_bytes", rec.n_bytes)
+        self._gauges()
+        return used
+
+    def _land_spill(self, rec: InFlightSpill):
+        """Completion half of a spill (the old synchronous tail): copy the
+        landed payload into the swap tier, free the victim's device pages
+        to the wait-line head, and fire the free callbacks."""
+        table = rec.table
+        host = [np.asarray(leaf) if leaf is not None else None
+                for leaf in rec.leaves]
+        handle = self.swap.store(host, rec.pages, rec.had_state)
+        table.spill = SpillEntry(pages=rec.pages, data=handle.views,
+                                 had_state=rec.had_state, tier=handle)
+        # the payload COPIED every used page (shared ones included), so
+        # releasing shared pages here is safe: the other holders keep the
+        # device copy, this table restores a private one
+        for b in sorted(table.blocks):
+            self._release_block(b)
+        if rec.had_state:
+            self._free_states[table.domain].append(table.state_slot)
+        self.counters.add("kv_blocks_freed", len(table.blocks))
+        self.counters.add("kv_spills", 1)
+        self.counters.add("kv_spilled_pages", rec.pages)
+        self.counters.add("kv_spill_overlap_rounds",
+                          self._poll_clock - rec.issue_clock)
+        table.blocks = []
+        table.state_slot = 0
+        table.inflight = False
+        self.spilled_tables += 1
+        self.spilled_bytes += rec.n_bytes
+        self.peak_spilled_bytes = max(self.peak_spilled_bytes,
+                                      self.spilled_bytes)
+        self._gauges()
+        for cb in self._on_free:
+            cb()
+
+    def spill_poll(self) -> int:
+        """Land every in-flight spill whose device arrays report ready;
+        never blocks.  One call per engine round is the poll phase of the
+        pressure ladder (and the overlap clock: rounds between issue and
+        landing are decode rounds the transfer hid behind)."""
+        self._poll_clock += 1
+        done = [r for r in self._inflight if r.ready()]
+        for r in done:
+            self._inflight.remove(r)
+            self._land_spill(r)
+        return len(done)
+
+    def spill_fence(self, table: Optional[KVTable] = None, *,
+                    count_wait: bool = True) -> int:
+        """Block until the given table's transfer (or ALL transfers with
+        ``table=None``) lands — the drain path for shutdown, relayout,
+        eviction and the watchdog's stalled rung.  ``count_wait`` records
+        a ``kv_fence_waits`` event when the fence actually had to wait
+        (synchronous ``spill`` fences unconditionally and doesn't count)."""
+        recs = [r for r in self._inflight
+                if table is None or r.table is table]
+        waited = any(not r.ready() for r in recs)
+        for r in recs:
+            for leaf in r.leaves:
+                if leaf is not None:
+                    leaf.block_until_ready()
+            self._inflight.remove(r)
+            self._land_spill(r)
+        if recs and waited and count_wait:
+            self.counters.add("kv_fence_waits", 1)
+        return len(recs)
+
+    def drain(self) -> int:
+        """Fence every outstanding transfer (shutdown/relayout path)."""
+        return self.spill_fence(None, count_wait=False)
+
+    def inflight_tables(self) -> int:
+        return len(self._inflight)
+
+    def inflight_pages(self) -> int:
+        return sum(r.pages for r in self._inflight)
+
+    def inflight_bytes(self) -> float:
+        return sum(r.n_bytes for r in self._inflight)
+
+    def inflight_domains(self) -> set:
+        """Domains with a spill in flight — their frees are already in
+        the pipe, so the watermark rung must not double-spill them."""
+        return {r.table.domain for r in self._inflight}
+
     def spill(self, table: KVTable) -> int:
         """Move a table's USED pages (+ state slot) into the host swap
         tier and free its device resources to the wait-line head.
@@ -777,35 +957,14 @@ class KVBlockPool:
         still admitted, just host-resident) but holds zero device blocks
         until :meth:`restore`; its saved decode cursor makes the
         spill/restore cycle invisible in the token output.  Returns the
-        number of pages spilled (0 = already spilled, nothing to do)."""
-        if table.spill is not None:
+        number of pages spilled (0 = already spilled, nothing to do).
+        This is the SYNCHRONOUS path: issue + immediate fence."""
+        if table.inflight:
+            self.spill_fence(table, count_wait=False)
             return 0
-        used = min(table.used_pages, len(table.blocks))
-        had_state = bool(self.has_state and table.state_slot)
-        data = self._spill_gather(
-            self.storage, table.blocks[:used],
-            state_slot=table.state_slot if had_state else None)
-        table.spill = SpillEntry(pages=used, data=data, had_state=had_state)
-        # the host payload COPIED every used page (shared ones included),
-        # so releasing shared pages here is safe: the other holders keep
-        # the device copy, this table restores a private one
-        for b in sorted(table.blocks):
-            self._release_block(b)
-        if had_state:
-            self._free_states[table.domain].append(table.state_slot)
-        self.counters.add("kv_blocks_freed", len(table.blocks))
-        self.counters.add("kv_spills", 1)
-        self.counters.add("kv_spilled_pages", used)
-        table.blocks = []
-        table.state_slot = 0
-        self.spilled_tables += 1
-        self.spilled_bytes += kv_spill_bytes(self.cfg, used,
-                                             self.block_tokens, had_state)
-        self.peak_spilled_bytes = max(self.peak_spilled_bytes,
-                                      self.spilled_bytes)
-        self._gauges()
-        for cb in self._on_free:
-            cb()
+        used = self.spill_issue(table)
+        if table.inflight:
+            self.spill_fence(table, count_wait=False)
         return used
 
     def restore(self, table: KVTable) -> bool:
@@ -814,6 +973,8 @@ class KVBlockPool:
         the host payload back; False (no side effects) when the domain
         lacks pages or a state slot.  The stream resumes mid-decode at its
         saved cursor — zero recomputed tokens."""
+        if table.inflight:
+            self.spill_fence(table, count_wait=False)
         sp = table.spill
         if sp is None:
             return True
@@ -824,16 +985,78 @@ class KVBlockPool:
             return False
         blocks = [self._pop_block(d) for _ in range(sp.pages)]
         slot = self._take_state(d) if self.has_state else 0
+        data = sp.staged if sp.staged is not None else sp.data
         self.storage = self._spill_scatter(
-            self.storage, blocks, sp.data,
+            self.storage, blocks, data,
             state_slot=slot if sp.had_state else None)
         table.blocks = blocks
         table.state_slot = slot
         table.used_pages = sp.pages
+        n_bytes = kv_spill_bytes(self.cfg, sp.pages, self.block_tokens,
+                                 sp.had_state)
         self._drop_spill(table)
         self.counters.add("kv_blocks_allocated", sp.pages)
         self.counters.add("kv_restores", 1)
+        self.counters.add("kv_h2d_bytes", n_bytes)
         self._note_usage(d)
+        return True
+
+    def restore_into(self, table: KVTable, domain: int,
+                     grow_by: int = 0) -> bool:
+        """One ATOMIC restore-sweep leg: land a spilled table in
+        ``domain`` with ``grow_by`` extra ring pages, reserving pages +
+        grow + state slot all-or-nothing.  False leaves ZERO side effects
+        — no re-point, no popped page, no consumed state checkpoint — so
+        a failed leg of the engine's domain sweep can never strand the
+        stream half-restored or leak a slot (the PR-10 bugfix: the old
+        sweep re-pointed, restored, then grew in separate steps and a
+        late grow failure left a restored-but-unready stream holding a
+        reclaimed checkpoint)."""
+        if table.inflight:
+            self.spill_fence(table, count_wait=False)
+        sp = table.spill
+        if sp is None:
+            return False
+        cap = table.cap_pages or self.pages_per_stream
+        grow_by = min(max(0, grow_by), max(0, cap - sp.pages))
+        if (len(self._free_blocks[domain]) < sp.pages + grow_by
+                or not self.state_available(domain)):
+            return False
+        if not self.migrate(table, domain):     # spilled: pure re-point
+            return False
+        blocks = [self._pop_block(domain)
+                  for _ in range(sp.pages + grow_by)]
+        slot = self._take_state(domain) if self.has_state else 0
+        data = sp.staged if sp.staged is not None else sp.data
+        self.storage = self._spill_scatter(
+            self.storage, blocks[:sp.pages], data,
+            state_slot=slot if sp.had_state else None)
+        table.blocks = blocks
+        table.state_slot = slot
+        table.used_pages = sp.pages
+        n_bytes = kv_spill_bytes(self.cfg, sp.pages, self.block_tokens,
+                                 sp.had_state)
+        self._drop_spill(table)
+        self.counters.add("kv_blocks_allocated", sp.pages + grow_by)
+        self.counters.add("kv_restores", 1)
+        self.counters.add("kv_h2d_bytes", n_bytes)
+        if grow_by:
+            self.counters.add("kv_lazy_grows", 1)
+        self._note_usage(domain)
+        return True
+
+    def restore_prefetch(self, table: KVTable) -> bool:
+        """Stage a spilled table's payload H2D ahead of the re-grant —
+        called while the stream waits in line, so the upload drains
+        behind the ticks ahead of it and the eventual restore scatter
+        reads device-resident arrays.  Idempotent; False when there is
+        nothing to stage."""
+        sp = table.spill
+        if sp is None or sp.staged is not None:
+            return False
+        sp.staged = [jnp.asarray(h) if h is not None else None
+                     for h in sp.data]
+        self.counters.add("kv_restore_prefetches", 1)
         return True
 
     def _drop_spill(self, table: KVTable):
@@ -841,6 +1064,7 @@ class KVBlockPool:
         self.spilled_tables -= 1
         self.spilled_bytes -= kv_spill_bytes(self.cfg, sp.pages,
                                              self.block_tokens, sp.had_state)
+        self.swap.release(sp.tier)
         table.spill = None
 
     # -- speculative checkpoint / rollback ---------------------------------
@@ -880,6 +1104,81 @@ class KVBlockPool:
                                            state_slot=ckpt["slot"])
         self.counters.add("kv_spec_rollback_pages", len(ckpt["blocks"]))
 
+    def checkpoint_rows(self, rows: Sequence[Tuple[KVTable, int, int, bool]]
+                        ) -> List[dict]:
+        """Batched :meth:`checkpoint_pages` for ALL drafted rows of a
+        speculative tick: ONE device gather over the concatenation of
+        every row's write-touched pages + every hybrid row's state slot,
+        instead of a host round-trip per row (the PR-8 leftover).  The
+        snapshot stays DEVICE-resident — most checkpoints are dropped
+        untouched when the draft fully accepts, so no host copy ever
+        happens for them; :meth:`rollback_rows` scatters the rejected
+        rows' slices straight back.  ``rows`` entries are
+        ``(table, pos, n, pages)`` with the same per-row contract."""
+        metas = []
+        all_blocks: List[int] = []
+        slots: List[int] = []
+        for table, pos, n, pages in rows:
+            idx = self._write_pages(pos, n, len(table.blocks)) if pages \
+                else []
+            blocks = [table.blocks[j] for j in idx]
+            slot = table.state_slot if (self.has_state and table.state_slot) \
+                else None
+            metas.append((blocks, slot, len(all_blocks),
+                          len(slots) if slot is not None else -1))
+            all_blocks.extend(blocks)
+            if slot is not None:
+                slots.append(slot)
+            self.counters.add("kv_spec_ckpts", 1)
+            self.counters.add("kv_spec_ckpt_pages", len(blocks))
+        leaves = self._rows_gather(self.storage, all_blocks,
+                                   state_slots=slots) \
+            if (all_blocks or slots) else None
+        return [{"blocks": blocks, "slot": slot, "rows": leaves,
+                 "off": off, "soff": soff}
+                for blocks, slot, off, soff in metas]
+
+    def rollback_rows(self, ckpts: Sequence[dict]):
+        """Batched :meth:`rollback_pages` for the rows that REJECTED: one
+        device scatter restores every rolled-back row's pages + state slot
+        from the shared :meth:`checkpoint_rows` gather."""
+        live = [c for c in ckpts if c["blocks"] or c["slot"] is not None]
+        if not live:
+            return
+        groups: Dict[int, List[dict]] = {}
+        for c in live:          # rows from distinct ticks scatter apart
+            groups.setdefault(id(c["rows"]), []).append(c)
+        for group in groups.values():
+            leaves = group[0]["rows"]
+            blk_src: List[int] = []     # indices into the shared gather
+            dst_blocks: List[int] = []
+            st_src: List[int] = []
+            dst_slots: List[int] = []
+            for c in group:
+                blk_src.extend(range(c["off"], c["off"] + len(c["blocks"])))
+                dst_blocks.extend(c["blocks"])
+                if c["slot"] is not None and c["soff"] >= 0:
+                    st_src.append(c["soff"])
+                    dst_slots.append(c["slot"])
+                self.counters.add("kv_spec_rollback_pages",
+                                  len(c["blocks"]))
+            vals = []
+            for leaf, s in zip(leaves, self.spec.leaves):
+                if leaf is None:
+                    vals.append(None)
+                elif s.token_axis is not None:
+                    vals.append(jnp.take(leaf, jnp.asarray(blk_src,
+                                                           jnp.int32),
+                                         axis=s.batch_axis)
+                                if blk_src else None)
+                else:
+                    vals.append(jnp.take(leaf, jnp.asarray(st_src,
+                                                           jnp.int32),
+                                         axis=s.batch_axis)
+                                if st_src else None)
+            self.storage = self._rows_scatter(self.storage, dst_blocks,
+                                              vals, state_slots=dst_slots)
+
     # -- migration ---------------------------------------------------------
     def migrate(self, table: KVTable, new_domain: int) -> bool:
         """Move a table into ``new_domain``: re-reserve there, copy only the
@@ -888,6 +1187,11 @@ class KVBlockPool:
         """
         if table.domain == new_domain:
             return True
+        if table.inflight:
+            # a relayout/steal hitting an in-flight victim: fence — the
+            # payload lands, the table turns host-resident, and the move
+            # below becomes the free re-point
+            self.spill_fence(table, count_wait=False)
         if table.spill is not None:
             # host-resident: the table holds no device resources, so a
             # migration (relayout rebalance, steal into the thief's domain)
@@ -942,6 +1246,9 @@ class KVBlockPool:
         self.counters.set("kv_shared_pages", float(self.shared_pages()))
         self.counters.set("kv_shared_bytes", self.shared_bytes())
         self.counters.set("kv_cached_pages", float(self.cached_pages()))
+        self.counters.set("kv_spill_inflight_pages",
+                          float(self.inflight_pages()))
+        self.counters.set("kv_spill_inflight_bytes", self.inflight_bytes())
 
     # -- consistency -------------------------------------------------------
     def audit(self, tables: Iterable[KVTable] = ()):
@@ -964,9 +1271,24 @@ class KVBlockPool:
             if t.spill is not None:
                 assert not t.blocks and not t.state_slot, \
                     f"spilled table holds device resources: {t}"
+                assert not t.inflight, \
+                    "table both landed-spilled and in flight"
             held.update(t.blocks)
             if self.has_state and t.state_slot:
                 held_states.append(t.state_slot)
+        # in-flight transfers: fence-before-regrant means the victim still
+        # HOLDS its pages (counted above like any live table) and its
+        # payload is not yet in the swap tier; pages in flight must match
+        # the records exactly
+        for r in self._inflight:
+            assert r.table.inflight, \
+                "in-flight record on a table not marked inflight"
+            assert r.table.spill is None, \
+                "in-flight record on an already-landed table"
+            assert r.pages == min(r.table.used_pages,
+                                  len(r.table.blocks)), \
+                f"in-flight pages {r.pages} drifted from table " \
+                f"{min(r.table.used_pages, len(r.table.blocks))}"
         # refcounts are exact: one count per live table holding the block
         for b, c in held.items():
             assert self._ref.get(b, 0) == c, \
@@ -1048,6 +1370,17 @@ class KVBlockPool:
             "spill_repoints": snap.get("kv_spill_repoints", 0.0),
             "spilled_tables": float(self.spilled_tables),
             "peak_spilled_bytes": self.peak_spilled_bytes,
+            # async transfer engine: issue/poll/fence overlap surface
+            "spill_issues": snap.get("kv_spill_issues", 0.0),
+            "spill_inflight_pages": float(self.inflight_pages()),
+            "spill_inflight_bytes": self.inflight_bytes(),
+            "spill_overlap_rounds": snap.get("kv_spill_overlap_rounds",
+                                             0.0),
+            "fence_waits": snap.get("kv_fence_waits", 0.0),
+            "d2h_bytes": snap.get("kv_d2h_bytes", 0.0),
+            "h2d_bytes": snap.get("kv_h2d_bytes", 0.0),
+            "restore_prefetches": snap.get("kv_restore_prefetches", 0.0),
+            "swap_tier": self.swap.stats(),
             "bytes_per_domain": self.domain_bytes(),
             "prefill_chunk_bytes": prefill_chunk_bytes(
                 self.cfg, self.block_tokens, self.max_len),
